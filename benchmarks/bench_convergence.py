@@ -1,0 +1,47 @@
+"""Paper Fig. 6/7: iteration-to-loss parity and the LB-loss factor-2.
+
+MEASURED (not modeled): trains reduced SMILE / Switch / BERT variants on the
+same synthetic MLM stream and reports:
+  * CE per step (Fig. 6: SMILE's convergence matches Switch; both beat the
+    flop-matched dense baseline per-step... at toy scale we check parity);
+  * unscaled LB loss (Fig. 7: SMILE's unscaled LB ~= 2x Switch's because it
+    is the SUM of two additive terms, each with minimum 1 when unscaled —
+    here we report the scaled value whose floors are alpha+beta vs alpha).
+"""
+from __future__ import annotations
+
+import json
+
+from repro.launch.train import train
+
+STEPS = 40
+
+
+def convergence(steps: int = STEPS):
+    rows = {}
+    for arch in ("smile-3.7b", "switch-3.7b", "bert-110m"):
+        _, hist = train(arch, reduced=True, steps=steps, batch=16, seq=128,
+                        lr=1e-3, optimizer="lamb", seed=0, log_every=5)
+        rows[arch] = hist
+    return rows
+
+
+def main():
+    rows = convergence()
+    print("# Fig. 6/7 reproduction (measured, reduced models, synthetic MLM)")
+    print("arch,step,ce,lb_scaled")
+    for arch, hist in rows.items():
+        for h in hist:
+            print(f"{arch},{h['step']},{h['ce']:.4f},{h['lb']:.5f}")
+    s = rows["smile-3.7b"][-1]
+    o = rows["switch-3.7b"][-1]
+    print(f"# final CE smile {s['ce']:.3f} vs switch {o['ce']:.3f} "
+          f"(paper: curves overlap)")
+    if o["lb"] > 0:
+        print(f"# scaled LB smile/switch = {s['lb']/o['lb']:.2f} "
+            f"(floors: (a+b)/a = (0.005+0.005)/0.01 = 1.0 when scaled; "
+            f"paper Fig.7 reports ~2x when UNscaled)")
+
+
+if __name__ == "__main__":
+    main()

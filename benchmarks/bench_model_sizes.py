@@ -1,0 +1,51 @@
+"""Paper Table 2: throughput vs model size (3.7B / 13B / 48B, 128 experts,
+16 nodes), Switch vs SMILE, from the calibrated cost model."""
+from __future__ import annotations
+
+from benchmarks.cost_model import (P4D, MoELayerShape, allreduce_time,
+                                   calibrate_alpha, calibrate_tau,
+                                   moe_layer_time)
+
+SEQ, M, N_NODES = 128, 8, 16
+GLOBAL = 16384
+
+SIZES = {
+    # name: (micro, layers, d_model, d_ff, dense-equivalent active params)
+    "3.7B": (128, 12, 768, 3072, 110e6),
+    "13B": (64, 24, 1024, 4096, 340e6),
+    "48B": (64, 36, 1600, 6400, 1.2e9),
+}
+PAPER = {"3.7B": (8112, 20011), "13B": (4001, 6829), "48B": (889, 2223)}
+
+
+def table2():
+    alpha, tau = calibrate_alpha(), calibrate_tau()
+    rows = []
+    for name, (micro, L, d, ff, active) in SIZES.items():
+        s = MoELayerShape(tokens_per_device=micro * SEQ, d_model=d, d_ff=ff)
+        n_micro = max(1, GLOBAL // (micro * N_NODES * M))
+        out = {}
+        for router in ("switch", "smile"):
+            layer = moe_layer_time(s, P4D, N_NODES, router,
+                                   alpha=alpha, tau=tau)
+            t_c = 6 * active * micro * SEQ / (P4D.flops * 0.45)
+            t_micro = t_c + (L // 2) * (layer["a2a_s"] + layer["other_s"]) * 2
+            t = n_micro * t_micro + allreduce_time(active * 2, N_NODES,
+                                                   P4D.inter_bw)
+            out[router] = GLOBAL / t
+        rows.append((name, out["switch"], out["smile"]))
+    return rows
+
+
+def main():
+    print("# Table 2 reproduction (cost model; samples/second, 16 nodes)")
+    print("size,switch_ours,smile_ours,speedup_ours,switch_paper,"
+          "smile_paper,speedup_paper")
+    for name, sw, sm in table2():
+        psw, psm = PAPER[name]
+        print(f"{name},{sw:,.0f},{sm:,.0f},{sm/sw:.2f},{psw},{psm},"
+              f"{psm/psw:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Paper Fig. 8: weak & strong scaling, 1 -> 16 nodes, Switch vs SMILE.
+
+Weak scaling: global batch grows with GPUs (micro batch fixed at 128/GPU,
+one micro-step). Strong scaling: global batch fixed at 16384 (gradient
+accumulation shrinks as nodes grow). Reported as samples/second from the
+calibrated cost model; reproduces the paper's qualitative claims:
+
+  * Switch throughput is nearly flat (even non-monotonic) beyond 4 nodes;
+  * SMILE keeps scaling to 16 nodes (paper: 7.7x weak / 4x strong vs 1 node);
+  * on a single node bi-level routing only adds overhead (paper §4.3.1 obs 2).
+"""
+from __future__ import annotations
+
+from benchmarks.cost_model import (P4D, MoELayerShape, allreduce_time,
+                                   calibrate_alpha, calibrate_tau,
+                                   moe_layer_time)
+
+SEQ, MICRO, M = 128, 128, 8
+GLOBAL = 16384
+
+
+def step_time(router: str, n_nodes: int, n_micro: int, alpha, tau) -> float:
+    s = MoELayerShape(tokens_per_device=MICRO * SEQ, d_model=768, d_ff=3072)
+    layer = moe_layer_time(s, P4D, n_nodes, router, alpha=alpha, tau=tau)
+    t_compute = 6 * 110e6 * MICRO * SEQ / (P4D.flops * 0.45)
+    t_micro = t_compute + 6 * (layer["a2a_s"] + layer["other_s"]) * 2.0
+    t_dp = allreduce_time(110e6 * 2, n_nodes, P4D.inter_bw)
+    return n_micro * t_micro + t_dp
+
+
+def scaling():
+    alpha, tau = calibrate_alpha(), calibrate_tau()
+    rows = []
+    for n in (1, 2, 4, 8, 16):
+        gpus = n * M
+        # weak: batch = 128 * gpus, one micro-step
+        for router in ("switch", "smile"):
+            t = step_time(router, n, 1, alpha, tau)
+            rows.append(("weak", router, n, (MICRO * gpus) / t))
+        # strong: fixed global batch; accumulation steps shrink
+        n_micro = max(1, GLOBAL // (MICRO * gpus))
+        for router in ("switch", "smile"):
+            t = step_time(router, n, n_micro, alpha, tau)
+            rows.append(("strong", router, n, GLOBAL / t))
+    return rows
+
+
+def main():
+    rows = scaling()
+    print("# Fig. 8 reproduction (cost model; samples/second)")
+    print("mode,router,nodes,samples_per_s")
+    for mode, router, n, thr in rows:
+        print(f"{mode},{router},{n},{thr:,.0f}")
+    d = {(m, r, n): t for m, r, n, t in rows}
+    print(f"# weak scaling 16/1 nodes: smile "
+          f"{d[('weak','smile',16)]/d[('weak','smile',1)]:.1f}x "
+          f"(paper 7.7x), switch "
+          f"{d[('weak','switch',16)]/d[('weak','switch',1)]:.1f}x")
+    print(f"# strong scaling 16/1 nodes: smile "
+          f"{d[('strong','smile',16)]/d[('strong','smile',1)]:.1f}x "
+          f"(paper 4x)")
+
+
+if __name__ == "__main__":
+    main()

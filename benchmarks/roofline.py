@@ -1,0 +1,99 @@
+"""Roofline analysis (deliverable g).
+
+Reads ``experiments/dryrun/*.json`` (written by the multi-pod dry-run) and
+derives, per (arch x shape) on the single-pod 256-chip mesh:
+
+  compute_s    = loop-corrected HLO dot FLOPs / 197e12        (per chip)
+  memory_s     = loop-corrected HLO traffic bytes / 819e9     (per chip)
+  collective_s = per-class wire bytes / {50e9 ICI, 25e9 DCN}  (per chip)
+
+plus MODEL_FLOPS = 6*N_active*D and the utilization ratio
+MODEL_FLOPS / HLO_dot_FLOPs. The dominant term is the hillclimb target.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+CHIPS = 256
+
+
+def load(out_dir: str = "experiments/dryrun", mesh: str = "single",
+         tag: str = "") -> List[Dict]:
+    rows = []
+    suffix = f"__{mesh}{('__' + tag) if tag else ''}.json"
+    for fn in sorted(glob.glob(os.path.join(out_dir, f"*{suffix}"))):
+        base = os.path.basename(fn)[: -len(suffix)]
+        if not tag and "__single__" in os.path.basename(fn):
+            continue
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def _tokens(shape: str) -> int:
+    return {"train_4k": 256 * 4096, "prefill_32k": 32 * 32768,
+            "decode_32k": 128, "long_500k": 1}[shape]
+
+
+def roofline_row(r: Dict) -> Dict:
+    shape = r["shape"]
+    chips = 512 if r.get("mesh") == "2x16x16" else 256
+    compute_s = r["dot_flops_corrected"] / PEAK_FLOPS
+    # HBM proxy: matmul operand/output streams (weights + activations +
+    # KV-cache reads). The all-op boundary sum is kept as an upper bound —
+    # on CPU the emitter fuses nothing, so that sum counts every temp.
+    memory_s = r.get("dot_bytes_corrected", 0.0) / HBM_BW
+    memory_ub_s = r["traffic_bytes_corrected"] / HBM_BW
+    coll_s = r["collectives"]["total_seconds"]
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dom = max(terms, key=terms.get)
+    D = _tokens(shape)
+    mult = 3.0 if shape == "train_4k" else 1.0        # fwd+bwd
+    model_flops = 2.0 * r["active_params"] * D * mult / chips
+    hlo = max(r["dot_flops_corrected"], 1.0)
+    return {
+        "arch": r["arch"], "shape": shape, "router": r.get("router"),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_upper_s": memory_ub_s, "collective_s": coll_s,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / hlo,
+        "dcn_s": r["collectives"].get("dcn_seconds", 0.0),
+        "a2a_bytes": r["collectives"]["bytes_per_op"].get("all-to-all", 0.0),
+        "ar_bytes": r["collectives"]["bytes_per_op"].get("all-reduce", 0.0),
+        "ag_bytes": r["collectives"]["bytes_per_op"].get("all-gather", 0.0),
+        "arg_gb": r["memory"]["argument_bytes"] / 2**30,
+        "temp_gb": r["memory"]["temp_bytes"] / 2**30,
+    }
+
+
+def table(out_dir: str = "experiments/dryrun") -> List[Dict]:
+    return [roofline_row(r) for r in load(out_dir)]
+
+
+def main():
+    import sys
+    mesh = "multi" if "--multi" in sys.argv else "single"
+    rows = [roofline_row(r) for r in load(mesh=mesh)]
+    print(f"# Roofline ({'multi-pod 2x16x16' if mesh == 'multi' else 'single-pod 16x16'}, per-chip seconds per step)")
+    print("arch,shape,compute_s,memory_s,collective_s,dcn_s,dominant,"
+          "useful_ratio,a2a_GB,arg_GB,temp_GB")
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        print(f"{r['arch']},{r['shape']},{r['compute_s']:.4f},"
+              f"{r['memory_s']:.4f},{r['collective_s']:.4f},"
+              f"{r['dcn_s']:.4f},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['a2a_bytes']/2**30:.2f},"
+              f"{r['arg_gb']:.1f},{r['temp_gb']:.1f}")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print(f"# dominant-term distribution: {doms}")
+
+
+if __name__ == "__main__":
+    main()

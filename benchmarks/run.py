@@ -1,0 +1,46 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV blocks per benchmark. The dry-run-based
+roofline requires ``experiments/dryrun`` to be populated (see
+``python -m repro.launch.dryrun --all``); it is skipped gracefully otherwise.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _timed(name, fn):
+    t0 = time.time()
+    try:
+        fn()
+        status = "ok"
+    except Exception as e:  # pragma: no cover
+        status = f"FAIL: {type(e).__name__}: {e}"
+    dt = (time.time() - t0) * 1e6
+    print(f"\n[bench] {name},{dt:.0f}us,{status}\n" + "=" * 70)
+    return status == "ok"
+
+
+def main() -> None:
+    from benchmarks import (bench_convergence, bench_model_sizes,
+                            bench_moe_layer, bench_pipeline_chunks,
+                            bench_scaling, bench_throughput)
+    ok = True
+    ok &= _timed("table1_throughput", bench_throughput.main)
+    ok &= _timed("table2_model_sizes", bench_model_sizes.main)
+    ok &= _timed("table3_moe_layer", bench_moe_layer.main)
+    ok &= _timed("fig8_scaling", bench_scaling.main)
+    ok &= _timed("fig12_pipeline_chunks", bench_pipeline_chunks.main)
+    ok &= _timed("fig6_7_convergence", bench_convergence.main)
+    if os.path.isdir("experiments/dryrun") and os.listdir("experiments/dryrun"):
+        from benchmarks import roofline
+        ok &= _timed("roofline", roofline.main)
+    else:
+        print("[bench] roofline skipped (run repro.launch.dryrun --all first)")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,41 @@
+"""The paper's §4.4 microbenchmark: a tiny model with a single MoE layer,
+profiled under both routing schedules.
+
+On CPU this measures the arithmetic path and *counts* the collectives each
+schedule would issue (1 flat All2All x 2 hops vs 2+2 level-local All2Alls);
+on a real mesh the same code exercises the actual ICI/DCN paths.
+
+    PYTHONPATH=src python examples/moe_layer_profile.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import MoEConfig
+from repro.core.moe import init_moe_params, moe_layer
+from repro.sharding.plan import single_device_plan
+
+plan = single_device_plan()
+d, tokens = 256, 4096
+
+for router, alpha_beta in (("switch", (0.01, 0.0)), ("smile", (0.005, 0.005))):
+    cfg = MoEConfig(num_experts=64, top_k=1, d_ff_expert=1024,
+                    capacity_factor=2.0, router=router, grid=(8, 8),
+                    lb_alpha=alpha_beta[0], lb_beta=alpha_beta[1])
+    params = init_moe_params(jax.random.PRNGKey(0), cfg, d, plan)
+    x = jax.random.normal(jax.random.PRNGKey(1), (tokens, d))
+
+    fn = jax.jit(lambda p, x: moe_layer(p, x, cfg, plan)[0])
+    fn(params, x).block_until_ready()          # compile
+    t0 = time.time()
+    for _ in range(5):
+        fn(params, x).block_until_ready()
+    dt = (time.time() - t0) / 5
+
+    n_a2a = 2 if router == "switch" else 4
+    groups = "1 group of 64" if router == "switch" else "8-way + 8-way"
+    print(f"{router:7s}: {dt*1e3:7.1f} ms/layer (CPU math path) | "
+          f"{n_a2a} All2Alls per layer over {groups} workers")
+print("\nSee benchmarks/bench_moe_layer.py for the Table-3 cluster-time "
+      "reproduction and experiments/dryrun for the compiled-mesh bytes.")

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a batch of prompts through a MoE decoder
+(bi-level routing active in every MoE layer) and greedily decode.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch qwen3-moe-30b-a3b]
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-moe-30b-a3b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+    serve(args.arch, reduced=True, batch=args.batch,
+          prompt_len=args.prompt_len, new_tokens=args.new_tokens)
+
+
+if __name__ == "__main__":
+    main()

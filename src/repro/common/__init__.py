@@ -1,0 +1,25 @@
+from repro.common.config import (
+    INPUT_SHAPES,
+    InputShape,
+    ModelConfig,
+    MoEConfig,
+    RWKVConfig,
+    SSMConfig,
+    ServeConfig,
+    TrainConfig,
+)
+from repro.common.pytree import tree_bytes, tree_count, tree_norm
+
+__all__ = [
+    "INPUT_SHAPES",
+    "InputShape",
+    "ModelConfig",
+    "MoEConfig",
+    "RWKVConfig",
+    "SSMConfig",
+    "ServeConfig",
+    "TrainConfig",
+    "tree_bytes",
+    "tree_count",
+    "tree_norm",
+]

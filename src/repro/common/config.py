@@ -1,0 +1,252 @@
+"""Configuration dataclasses for the repro framework.
+
+Every architecture in ``repro.configs`` instantiates a :class:`ModelConfig`.
+The config is a plain frozen dataclass so it is hashable (usable as a static
+arg under ``jax.jit``) and trivially serializable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-Experts block configuration."""
+
+    num_experts: int = 0                # routed experts (0 = dense layer)
+    top_k: int = 1
+    top_g: int = 1                      # bi-level: nodes per token (k_local = top_k/top_g)
+    renorm_gates: bool = False          # renormalize selected gates to sum 1
+    d_ff_expert: int = 0                # expert FFN hidden size
+    num_shared_experts: int = 0         # always-on shared experts (deepseek-v3)
+    capacity_factor: float = 2.0        # paper uses 2.0
+    router: str = "switch"              # "switch" (one-hop) | "smile" (bi-level)
+    lb_alpha: float = 0.005             # inter-node LB loss coefficient (Eq. 4)
+    lb_beta: float = 0.005              # intra-node LB loss coefficient (Eq. 4)
+    router_z_coef: float = 0.0          # optional z-loss on router logits
+    every_n_layers: int = 1             # MoE layer every n-th layer (paper: 2)
+    first_dense_layers: int = 0         # leading dense layers (deepseek-v3: 3)
+    # Bi-level grid (n_inter x n_intra expert slots). 0 -> derive from mesh.
+    grid: Tuple[int, int] = (0, 0)
+    # beyond-paper: size level-2 capacity from EXPECTED valid arrivals rather
+    # than the padded level-1 buffer (fixes capacity compounding; see
+    # EXPERIMENTS.md §Perf-2). False reproduces the paper-faithful baseline.
+    tight_level2_capacity: bool = False
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block configuration."""
+
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 128                    # SSD chunk length
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV6 ("Finch") block configuration."""
+
+    head_dim: int = 64
+    decay_lora: int = 64                # rank of data-dependent decay LoRA
+    mix_lora: int = 32                  # rank of token-shift mix LoRA
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    arch_type: str = "dense"            # dense|moe|hybrid|ssm|vlm|audio|mlm
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 32000
+    head_dim: int = 0                   # 0 -> d_model // num_heads
+    max_seq_len: int = 131072
+
+    # --- attention flavour -------------------------------------------------
+    attention: str = "full"             # full|sliding|mla|none
+    causal: bool = True                 # False -> bidirectional (BERT/MLM)
+    window: int = 8192                  # sliding-window size
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    qkv_bias: bool = False              # qwen1.5 uses QKV bias
+    norm: str = "rmsnorm"               # rmsnorm|layernorm
+    act: str = "silu"                   # silu|gelu
+    glu: bool = True                    # gated FFN (llama-style); False -> plain MLP
+    tie_embeddings: bool = False
+    # MLA (deepseek-v3) dims
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+    # --- block pattern ------------------------------------------------------
+    # hybrid (zamba2): `ssm_layers_per_attn` mamba2 layers then 1 shared attn
+    ssm_layers_per_attn: int = 6
+
+    # --- sub-configs ---------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+
+    # --- multimodal stubs ----------------------------------------------------
+    num_codebooks: int = 1              # musicgen: 4
+    vision_tokens: int = 0              # phi-3-vision: image patch token budget
+    vision_embed_dim: int = 0           # CLIP output dim before projector
+
+    # --- extras ----------------------------------------------------------------
+    mtp_depth: int = 0                  # deepseek-v3 multi-token prediction depth
+    dtype: str = "bfloat16"             # compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True                  # activation checkpointing over layer scan
+    scan_layers: bool = True
+    # beyond-paper knobs (see EXPERIMENTS.md §Perf):
+    remat_save_collectives: bool = False  # don't re-psum during remat replay
+    kv_seq_shard: bool = False            # decode: shard KV cache seq over tp
+    # citation for the assigned config
+    source: str = ""
+
+    # ---------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.attention == "none"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for 6ND model-FLOPs accounting)."""
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        hd = self.resolved_head_dim
+        total = V * d                                     # embeddings
+        if not self.tie_embeddings:
+            total += V * d                                # lm head
+        for i in range(L):
+            total += self._layer_params(i)
+        if self.mtp_depth:
+            total += self.mtp_depth * (self._layer_params(L - 1) + 2 * d * d)
+        return total
+
+    def _attn_params(self) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        if self.attention == "mla":
+            qr, kvr = self.q_lora_rank, self.kv_lora_rank
+            qk = self.qk_nope_head_dim + self.qk_rope_head_dim
+            return (d * qr + qr * self.num_heads * qk
+                    + d * (kvr + self.qk_rope_head_dim)
+                    + kvr * self.num_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                    + self.num_heads * self.v_head_dim * d)
+        q = d * self.num_heads * hd
+        kv = 2 * d * self.num_kv_heads * hd
+        o = self.num_heads * hd * d
+        return q + kv + o
+
+    def _ffn_params(self, d_ff: int) -> int:
+        mult = 3 if self.glu else 2
+        return mult * self.d_model * d_ff
+
+    def _layer_params(self, i: int) -> int:
+        d = self.d_model
+        if self.arch_type == "ssm" and self.rwkv is not None:
+            # rwkv6: time-mix ~ 4*d*d + decay/mix LoRAs, channel-mix 3*d*d
+            r = self.rwkv
+            tm = 4 * d * d + d * r.decay_lora * 2 + 5 * d * r.mix_lora * 2 + d * d
+            cm = self.d_ff * d * 2 + d * d
+            return tm + cm + 2 * d
+        if self.arch_type == "hybrid" and self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * d
+            nheads = d_in // s.head_dim
+            mamba = (d * (2 * d_in + 2 * s.d_state * 0 + 0)
+                     + d * (2 * d_in + 2 * s.d_state + nheads)  # in_proj (x,z,B,C,dt)
+                     + d_in * d)                                 # out_proj
+            per_group = self.ssm_layers_per_attn
+            # shared attention amortized across groups
+            shared = (self._attn_params() + self._ffn_params(self.d_ff)) / max(
+                1, self.num_layers // per_group) / per_group
+            return int(mamba + shared + 2 * d)
+        ffn = self._ffn_params(self.d_ff)
+        if self.moe is not None and self.moe.num_experts:
+            is_moe = (i >= self.moe.first_dense_layers
+                      and (i - self.moe.first_dense_layers) % self.moe.every_n_layers == 0)
+            if is_moe:
+                e_ffn = self._ffn_params(self.moe.d_ff_expert)
+                ffn = (self.moe.num_experts + self.moe.num_shared_experts) * e_ffn
+                ffn += self.moe.num_experts * self.d_model  # router
+        return self._attn_params() + ffn + 2 * self.d_model
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only top-k + shared experts)."""
+        if self.moe is None or not self.moe.num_experts:
+            return self.param_count()
+        d, L, V = self.d_model, self.num_layers, self.vocab_size
+        total = V * d + (0 if self.tie_embeddings else V * d)
+        for i in range(L):
+            ffn = self._ffn_params(self.d_ff)
+            is_moe = (i >= self.moe.first_dense_layers
+                      and (i - self.moe.first_dense_layers) % self.moe.every_n_layers == 0)
+            if is_moe:
+                e_ffn = self._ffn_params(self.moe.d_ff_expert)
+                ffn = (self.moe.top_k + self.moe.num_shared_experts) * e_ffn
+                ffn += self.moe.num_experts * d
+            total += self._attn_params() + ffn + 2 * d
+        return total
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    global_batch_size: int = 256
+    micro_batch_size: int = 0           # 0 -> no gradient accumulation
+    seq_len: int = 4096
+    steps: int = 100
+    optimizer: str = "lamb"             # lamb|adamw
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    eps: float = 1e-6
+    b1: float = 0.9
+    b2: float = 0.999
+    schedule: str = "cosine"            # cosine|linear|constant
+    mlm_mask_prob: float = 0.15         # for MLM archs
+    seed: int = 0
+    log_every: int = 10
+    ckpt_every: int = 0
+    ckpt_dir: str = ""
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    batch_size: int = 8
+    prompt_len: int = 128
+    max_new_tokens: int = 32
+    cache_len: int = 0                  # 0 -> prompt_len + max_new_tokens
+    temperature: float = 0.0            # 0 -> greedy
+
+
+# The four assigned input shapes -------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

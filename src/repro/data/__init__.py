@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    DataPipeline,
+    make_batch,
+    mlm_mask,
+    synthetic_tokens,
+)
+
+__all__ = ["DataPipeline", "make_batch", "mlm_mask", "synthetic_tokens"]

@@ -1,0 +1,54 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this offline container) every kernel runs in ``interpret=True`` mode
+— the kernel body executes exactly as written, validating the Pallas code
+against the :mod:`repro.kernels.ref` oracles; on TPU the same calls compile
+to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.grouped_ffn import grouped_ffn_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def grouped_ffn(x, w1, w3, w2, *, act: str = "gelu"):
+    """Grouped expert FFN; falls back to the jnp oracle for tiny shapes
+    (interpret-mode overhead dominates below one MXU tile)."""
+    G, T, d = x.shape
+    if T < 16 or d % 8:
+        return ref.grouped_ffn_ref(x, w1, w3, w2, act=act)
+    return grouped_ffn_pallas(x, w1.astype(x.dtype),
+                              None if w3 is None else w3.astype(x.dtype),
+                              w2.astype(x.dtype), act=act,
+                              interpret=_interpret())
+
+
+def flash_attention(q, k, v):
+    """Causal attention with GQA expansion. q: (B,T,H,hd); k/v: (B,T,KV,hd)."""
+    H, KV = q.shape[2], k.shape[2]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return flash_attention_pallas(q, k, v, interpret=_interpret())
+
+
+def rwkv6_scan(r, k, v, w, u, s0):
+    return rwkv6_scan_pallas(r, k, v, w, u, s0, interpret=_interpret())
+
+
+def ssd_chunk(xh, dt, loga, Bc, Cc):
+    """Mamba2 SSD intra-chunk terms (see kernels/ssd_chunk.py)."""
+    return ssd_chunk_pallas(xh, dt, loga, Bc, Cc, interpret=_interpret())

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_ffn_ref(x, w1, w3, w2, *, act: str = "gelu"):
+    """x: (G, T, d); w1/w3: (G, d, f); w2: (G, f, d)."""
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = jnp.einsum("gtd,gdf->gtf", x.astype(jnp.float32),
+                   w1.astype(jnp.float32))
+    h = actf(h)
+    if w3 is not None:
+        h = h * jnp.einsum("gtd,gdf->gtf", x.astype(jnp.float32),
+                           w3.astype(jnp.float32))
+    y = jnp.einsum("gtf,gfd->gtd", h.astype(x.dtype).astype(jnp.float32),
+                   w2.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v):
+    """Causal softmax attention. q/k/v: (B, T, H, hd)."""
+    B, T, H, hd = q.shape
+    s = jnp.einsum("bthk,bshk->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhts,bshk->bthk", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """Sequential WKV6. r/k/v/w: (B,T,nh,hd); u: (nh,hd); s0: (B,nh,hd,hd)."""
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                             # (B, nh, hd)
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", rt,
+                       s + u.astype(jnp.float32)[None, :, :, None] * kv)
+        return wt[..., :, None] * s + kv, y
+
+    s_last, ys = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf)))
+    return ys.transpose(1, 0, 2, 3), s_last
+
+
+def ssd_chunk_ref(xh, dt, loga, Bc, Cc):
+    """Intra-chunk SSD terms (mirrors models/mamba2.py chunked math).
+
+    xh: (B,nc,Q,nh,hd); dt/loga: (B,nc,Q,nh); Bc/Cc: (B,nc,Q,ds)."""
+    xq = xh.astype(jnp.float32)
+    dq = dt.astype(jnp.float32)
+    lq = loga.astype(jnp.float32)
+    Bq = Bc.astype(jnp.float32)
+    Cq = Cc.astype(jnp.float32)
+    Q = xq.shape[2]
+    cs = jnp.cumsum(lq, axis=2)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cq, Bq)
+    decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+    w_ij = jnp.exp(decay) * scores[..., None]
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w_ij, dq, xq)
+    tail = cs[:, :, -1:, :] - cs
+    sB = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn",
+                    jnp.exp(tail), dq, xq, Bq)
+    a_chunk = jnp.exp(cs[:, :, -1, :])
+    return y_intra, sB, a_chunk

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: Mamba2 SSD intra-chunk block.
+
+The chunked state-space-dual computation is zamba2's compute hot spot. For
+one (batch, chunk, head) cell it fuses:
+
+    cs       = cumsum(loga)                       (Q,)
+    scores   = C B^T                              (Q, Q)   MXU
+    w        = tril(exp(cs_i - cs_j)) * scores
+    y_intra  = (w * dt_j) x                       (Q, hd)  MXU
+    sB       = (exp(cs_Q - cs) * dt * x)^T B      (hd, ds) MXU
+    a_chunk  = exp(cs_Q)
+
+materializing the (Q, Q) decay matrix only in VMEM (the jnp reference builds
+a (B, nc, Q, Q, nh) tensor in HBM). The sequential inter-chunk recurrence
+(tiny: (hd, ds) state per head) stays in ``lax.scan`` outside the kernel.
+
+Working set at Q=128, hd=64, ds=64: Q*hd + 2*Q*ds + Q*Q + hd*ds fp32
+~ 160 KB — far under VMEM; both matmul shapes are 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref,
+            y_ref, sb_ref, ac_ref):
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, hd)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)         # (Q,)
+    loga = loga_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    B = b_ref[0, 0].astype(jnp.float32)                 # (Q, ds)
+    C = c_ref[0, 0].astype(jnp.float32)                 # (Q, ds)
+    Q = x.shape[0]
+
+    cs = jnp.cumsum(loga)                               # (Q,)
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # (Q,Q)
+    decay = cs[:, None] - cs[None, :]
+    mask = jax.lax.iota(jnp.int32, Q)[:, None] >= \
+        jax.lax.iota(jnp.int32, Q)[None, :]
+    w = jnp.where(mask, jnp.exp(decay), 0.0) * scores   # (Q, Q)
+    y = jnp.dot(w * dt[None, :], x,
+                preferred_element_type=jnp.float32)     # (Q, hd)
+    tail = jnp.exp(cs[-1] - cs)                         # (Q,)
+    sb = jnp.dot((tail * dt)[:, None].T * x.T, B,
+                 preferred_element_type=jnp.float32)    # (hd, ds)
+    y_ref[0, 0, :, 0, :] = y
+    sb_ref[0, 0, 0] = sb
+    ac_ref[0, 0, 0] = jnp.exp(cs[-1])
+
+
+def ssd_chunk_pallas(xh, dt, loga, Bc, Cc, *, interpret: bool = False):
+    """Intra-chunk SSD terms.
+
+    xh: (B, nc, Q, nh, hd); dt/loga: (B, nc, Q, nh); Bc/Cc: (B, nc, Q, ds).
+    Returns (y_intra (B,nc,Q,nh,hd), sB (B,nc,nh,hd,ds), a_chunk (B,nc,nh)).
+    """
+    B, nc, Q, nh, hd = xh.shape
+    ds = Bc.shape[-1]
+    grid = (B * nc, nh)
+    xr = xh.reshape(B * nc, 1, Q, nh, hd)
+    dtr = dt.reshape(B * nc, 1, Q, nh)
+    lr = loga.reshape(B * nc, 1, Q, nh)
+    br = Bc.reshape(B * nc, 1, Q, ds)
+    cr = Cc.reshape(B * nc, 1, Q, ds)
+
+    y, sb, ac = pl.pallas_call(
+        _kernel,
+        out_shape=(jax.ShapeDtypeStruct((B * nc, 1, Q, nh, hd), jnp.float32),
+                   jax.ShapeDtypeStruct((B * nc, 1, nh, hd, ds), jnp.float32),
+                   jax.ShapeDtypeStruct((B * nc, 1, nh), jnp.float32)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, hd), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda g, h: (g, 0, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda g, h: (g, 0, 0, h)),
+            pl.BlockSpec((1, 1, Q, ds), lambda g, h: (g, 0, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda g, h: (g, 0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, Q, 1, hd), lambda g, h: (g, 0, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, hd, ds), lambda g, h: (g, 0, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda g, h: (g, 0, h)),
+        ),
+        interpret=interpret,
+    )(xr, dtr, lr, br, cr)
+    return (y.reshape(B, nc, Q, nh, hd), sb.reshape(B, nc, nh, hd, ds),
+            ac.reshape(B, nc, nh))

@@ -1,0 +1,101 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's fuel.
+
+Nothing here allocates device memory: params, optimizer state, batches and
+decode caches are all ``jax.ShapeDtypeStruct`` with attached NamedShardings,
+which is exactly what ``jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import InputShape, ModelConfig
+from repro.models import transformer as T
+from repro.sharding.plan import MeshPlan
+from repro.sharding.specs import (batch_dim_spec, batch_specs, cache_specs,
+                                  param_specs)
+
+
+def _sds(tree, spec_tree, mesh):
+    def one(x, s):
+        sh = NamedSharding(mesh, s) if mesh is not None else None
+        return jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh)
+    return jax.tree.map(one, tree, spec_tree,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def params_struct(cfg: ModelConfig, plan: MeshPlan, mesh=None,
+                  dtype=None):
+    """Abstract params (+ their specs) without allocating. ``dtype``
+    overrides floating leaves (bf16 serving weights)."""
+    shapes = jax.eval_shape(
+        lambda k: T.init_model(k, cfg, plan), jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, dtype if jnp.issubdtype(x.dtype, jnp.floating)
+                else x.dtype), shapes)
+    specs = param_specs(shapes, cfg, plan)
+    return _sds(shapes, specs, mesh), specs
+
+
+def train_batch_struct(cfg: ModelConfig, shape: InputShape, plan: MeshPlan,
+                       mesh=None):
+    B, S = shape.global_batch, shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.num_codebooks > 1:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, cfg.num_codebooks, S),
+                                               jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((B, cfg.num_codebooks, S),
+                                               jnp.int32)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.vision_tokens:
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.vision_embed_dim), jnp.float32)
+        batch["image_pos"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens), jnp.int32)
+    specs = batch_specs(batch, plan)
+    return _sds(batch, specs, mesh), specs
+
+
+def prefill_batch_struct(cfg: ModelConfig, shape: InputShape, plan: MeshPlan,
+                         mesh=None):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.num_codebooks > 1:
+        toks = jax.ShapeDtypeStruct((B, cfg.num_codebooks, S), jnp.int32)
+    else:
+        toks = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    spec = batch_specs({"t": toks}, plan)["t"]
+    return _sds(toks, spec, mesh), spec
+
+
+def cache_length(cfg: ModelConfig, shape: InputShape) -> int:
+    L = shape.seq_len
+    if cfg.attention == "sliding":
+        L = min(L, cfg.window)
+    return L
+
+
+def decode_state_struct(cfg: ModelConfig, shape: InputShape, plan: MeshPlan,
+                        mesh=None):
+    """(token, caches, step) structs for the decode step."""
+    B = shape.global_batch
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, cache_length(cfg, shape), plan))
+    cspecs = cache_specs(caches, cfg, plan, B)
+    if cfg.num_codebooks > 1:
+        tok = jax.ShapeDtypeStruct((B, cfg.num_codebooks), jnp.int32)
+        tspec = P(batch_dim_spec(B, plan), None)
+    else:
+        tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+        tspec = P(batch_dim_spec(B, plan))
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return (_sds(tok, tspec, mesh), _sds(caches, cspecs, mesh),
+            (jax.ShapeDtypeStruct((), jnp.int32, sharding=NamedSharding(mesh, P()))
+             if mesh is not None else step)), (tspec, cspecs, P())

@@ -1,0 +1,111 @@
+"""Training driver.
+
+Runs real optimization steps on whatever devices exist (one CPU here; the
+production mesh on TPU — the same code path, only the mesh changes). For
+CPU-scale runs pass a reduced arch (``--reduced``).
+
+  PYTHONPATH=src python -m repro.launch.train --arch smile-3.7b --reduced \
+      --steps 50 --batch 16 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import TrainConfig
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import DataPipeline
+from repro.models.transformer import init_model
+from repro.optim import make_optimizer, make_schedule
+from repro.sharding.plan import plan_from_mesh, single_device_plan
+from repro.train.checkpoint import save_checkpoint
+from repro.train.step import build_train_step
+
+
+def train(arch: str, *, reduced: bool = True, steps: int = 50,
+          batch: int = 16, seq: int = 128, lr: float = 3e-4,
+          optimizer: str = "lamb", seed: int = 0, log_every: int = 10,
+          ckpt: str = "", mesh=None, micro_batch: int = 0,
+          log_file: str = "", zero1: bool = False, eval_every: int = 0):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    plan = plan_from_mesh(mesh) if mesh is not None else single_device_plan()
+    tcfg = TrainConfig(global_batch_size=batch, seq_len=seq, steps=steps,
+                       optimizer=optimizer, lr=lr, warmup_steps=max(steps // 10, 1),
+                       micro_batch_size=micro_batch, seed=seed)
+
+    key = jax.random.PRNGKey(seed)
+    params = init_model(key, cfg, plan)
+    opt = make_optimizer(optimizer)
+    sched = make_schedule("cosine", lr, tcfg.warmup_steps, steps)
+    if zero1:
+        from repro.train.step import zero1_state
+        opt_state = zero1_state(params, cfg, plan)
+    else:
+        opt_state = opt.init(params)
+
+    pipe = DataPipeline(cfg, batch, seq, seed=seed)
+    sample = next(pipe)
+    batch0 = {k: jnp.asarray(v) for k, v in sample.items()}
+    step_fn, _ = build_train_step(cfg, tcfg, plan, opt, sched, params,
+                                  batch0, mesh=mesh, zero1=zero1)
+
+    history = []
+    t0 = time.time()
+    for i in range(steps):
+        b = batch0 if i == 0 else {k: jnp.asarray(v) for k, v in next(pipe).items()}
+        params, opt_state, m = step_fn(params, opt_state, b, jnp.int32(i + 1))
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in m.items()}
+            toks = batch * seq * (i + 1)
+            dt = time.time() - t0
+            print(f"step {i+1:5d} loss {m['loss']:.4f} ce {m['ce']:.4f} "
+                  f"lb {m['lb']:.4f} drop {m['drop_frac']:.3f} "
+                  f"gnorm {m['grad_norm']:.2f} tok/s {toks/dt:,.0f}")
+            history.append({"step": i + 1, **m, "tokens_per_s": toks / dt})
+        if eval_every and (i + 1) % eval_every == 0:
+            from repro.train.evaluate import evaluate
+            ev = evaluate(params, cfg, plan, batch=batch, seq=seq, seed=seed,
+                          n_batches=2)
+            print(f"  eval ce {ev['eval_ce']:.4f} ppl {ev['eval_ppl']:.1f}")
+            history.append({"step": i + 1, **ev})
+    pipe.close()
+    if ckpt:
+        save_checkpoint(ckpt, params, opt_state, steps)
+        print(f"saved checkpoint -> {ckpt}")
+    if log_file:
+        with open(log_file, "w") as f:
+            json.dump(history, f, indent=1)
+    return params, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="lamb")
+    ap.add_argument("--micro-batch", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-file", default="")
+    ap.add_argument("--zero1", action="store_true",
+                    help="shard optimizer state over replicated axes")
+    ap.add_argument("--eval-every", type=int, default=0)
+    args = ap.parse_args()
+    train(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
+          seq=args.seq, lr=args.lr, optimizer=args.optimizer, seed=args.seed,
+          ckpt=args.ckpt, micro_batch=args.micro_batch,
+          log_file=args.log_file, zero1=args.zero1,
+          eval_every=args.eval_every)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,443 @@
+"""Model building blocks, written against local shards inside ``shard_map``.
+
+Conventions
+-----------
+* Activations are ``(B_loc, S, d)`` — batch sharded over the data-parallel
+  axes, full model dim, replicated over the tensor-parallel axis.
+* Tensor-parallel weights are stored with *global* shapes and sharded by the
+  PartitionSpec rules in :mod:`repro.sharding.specs`; inside ``shard_map``
+  each leaf arrives as its local shard, and the code reads dims off the
+  arrays, never off the config.
+* All collectives go through :mod:`repro.sharding.comm`, so with an empty
+  plan this file is the pure-jnp single-device oracle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.sharding import comm
+from repro.sharding.plan import MeshPlan
+
+
+def _norm_init(d: int, kind: str):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p: Dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0])
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# =============================================================================
+# Rotary position embedding
+# =============================================================================
+
+def rope_frequencies(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, hd); positions: (T,) absolute positions."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (T, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# =============================================================================
+# Vocab-parallel embedding + LM head + cross-entropy
+# =============================================================================
+
+def init_embedding(key, cfg: ModelConfig, plan: MeshPlan) -> Dict:
+    p = {"table": dense_init(key, (cfg.vocab_size, cfg.d_model), scale=0.02)}
+    return p
+
+
+def embed_tokens(p: Dict, ids: jax.Array, plan: MeshPlan,
+                 dtype=jnp.bfloat16) -> jax.Array:
+    """Vocab-parallel lookup: table sharded on vocab dim over tp."""
+    table = p["table"]
+    v_loc = table.shape[0]
+    start = comm.axis_index(plan.tp_axis) * v_loc
+    local = ids - start
+    hit = (local >= 0) & (local < v_loc)
+    emb = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
+    emb = emb * hit[..., None].astype(table.dtype)
+    return comm.psum(emb, plan.tp_axis).astype(dtype)
+
+
+def output_logits(p: Dict, x: jax.Array, plan: MeshPlan) -> jax.Array:
+    """Vocab-sharded logits (..., V_loc); fp32."""
+    w = p["table"] if "table" in p else p["w"]                # tied or separate
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def vocab_parallel_xent(logits: jax.Array, labels: jax.Array,
+                        plan: MeshPlan) -> jax.Array:
+    """Cross-entropy over vocab-sharded fp32 logits (..., V_loc).
+
+    ``labels`` are global vocab ids. Returns per-position loss (...,).
+    Megatron-style: max/sum-exp/label-pick are each reduced over tp.
+    """
+    v_loc = logits.shape[-1]
+    start = comm.axis_index(plan.tp_axis) * v_loc
+    # the max shift is a numerical-stability constant; keep it out of AD
+    # (lax.pmax has no differentiation rule, and its gradient is zero anyway)
+    m = comm.pmax(lax.stop_gradient(logits.max(-1)), plan.tp_axis)
+    lse = jnp.log(comm.psum(jnp.exp(logits - m[..., None]).sum(-1),
+                            plan.tp_axis)) + m
+    local = labels - start
+    hit = (local >= 0) & (local < v_loc)
+    picked = jnp.take_along_axis(
+        logits, jnp.clip(local, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
+    picked = comm.psum(picked * hit.astype(logits.dtype), plan.tp_axis)
+    return lse - picked
+
+
+def gather_full_logits(logits: jax.Array, plan: MeshPlan) -> jax.Array:
+    """(..., V_loc) -> (..., V). Used only at the sampling point in serving."""
+    return comm.all_gather(logits, plan.tp_axis, axis=logits.ndim - 1)
+
+
+# =============================================================================
+# Dense FFN (Megatron tensor parallel: col-shard up, row-shard down, psum)
+# =============================================================================
+
+def init_ffn(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": dense_init(k1, (d, f)), "w2": dense_init(k2, (f, d))}
+    if cfg.glu:
+        p["w3"] = dense_init(k3, (d, f))
+    return p
+
+
+def ffn_forward(p: Dict, x: jax.Array, cfg: ModelConfig,
+                plan: MeshPlan) -> jax.Array:
+    actf = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    h = actf(jnp.einsum("...d,df->...f", x, p["w1"].astype(x.dtype)))
+    if "w3" in p:
+        h = h * jnp.einsum("...d,df->...f", x, p["w3"].astype(x.dtype))
+    y = jnp.einsum("...f,fd->...d", h, p["w2"].astype(x.dtype))
+    return comm.name_saved(comm.psum(y, plan.tp_axis))
+
+
+# =============================================================================
+# Streaming-softmax ("flash"-style) attention core, pure jnp
+# =============================================================================
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      *, causal: bool, window: int = 0,
+                      chunk: int = 1024, use_kernel: bool = False,
+                      return_partial: bool = False) -> jax.Array:
+    """O(S*chunk)-memory attention.
+
+    q: (B, Tq, H, hd); k/v: (B, Tk, KV, hd) with KV | H (GQA).
+    ``q_pos``: (Tq,), ``k_pos``: (Tk,) absolute positions; invalid cache slots
+    carry a negative position and are masked out.
+    """
+    if use_kernel and causal and window == 0 and q.shape[1] == k.shape[1]:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v)
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                     # may differ from hd (MLA)
+    g = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).astype(jnp.float32).reshape(B, Tq, KV, g, hd)
+
+    pad = (-Tk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=-1)
+    n_chunks = k.shape[1] // chunk
+    kc = k.reshape(B, n_chunks, chunk, KV, hd).astype(jnp.float32)
+    vc = v.reshape(B, n_chunks, chunk, KV, dv).astype(jnp.float32)
+    pc = k_pos.reshape(n_chunks, chunk)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, pb = inp                                       # (B,c,KV,hd)...
+        s = jnp.einsum("btkgh,bckh->btkgc", qf, kb)            # (B,Tq,KV,g,c)
+        mask = pb[None, None, None, None, :] >= 0
+        if causal:
+            mask &= q_pos[None, :, None, None, None] >= pb[None, None, None, None, :]
+        if window:
+            mask &= (q_pos[None, :, None, None, None]
+                     - pb[None, None, None, None, :]) < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("btkgc,bckh->btkgh", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Tq, KV, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Tq, KV, g), jnp.float32)
+    a0 = jnp.zeros((B, Tq, KV, g, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(
+        step, (m0, l0, a0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4), pc))
+    if return_partial:
+        return m, l, acc                     # caller merges across shards
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Tq, H, dv).astype(q.dtype)
+
+
+def merge_attention_partials(m, l, acc, axes, out_shape, dtype):
+    """Flash-decoding style merge of per-shard softmax partials over ``axes``
+    (the KV cache is sequence-sharded across the tensor-parallel axis)."""
+    m_g = comm.pmax(m, axes)
+    corr = jnp.exp(m - m_g)
+    l_g = comm.psum(l * corr, axes)
+    acc_g = comm.psum(acc * corr[..., None], axes)
+    out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+    return out.reshape(out_shape).astype(dtype)
+
+
+# =============================================================================
+# GQA attention (tensor parallel over heads) with ring-buffer KV cache
+# =============================================================================
+
+def init_attention(key, cfg: ModelConfig) -> Dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    k1, k2, k3, k4, kb = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(k1, (d, H, hd)),
+        "wk": dense_init(k2, (d, KV, hd)),
+        "wv": dense_init(k3, (d, KV, hd)),
+        "wo": dense_init(k4, (H, hd, d), scale=1.0 / math.sqrt(H * hd)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), jnp.float32)
+        p["bk"] = jnp.zeros((KV, hd), jnp.float32)
+        p["bv"] = jnp.zeros((KV, hd), jnp.float32)
+    return p
+
+
+def _kv_slice_for_my_heads(kv: jax.Array, h_loc: int, H: int, KV: int,
+                           plan: MeshPlan) -> jax.Array:
+    """When KV heads could not be sharded (KV < tp), slice the ones backing
+    this device's query heads out of the replicated KV projection."""
+    kv_here = kv.shape[2]
+    need = max(1, (h_loc * KV) // H)
+    if kv_here == need:          # already sharded to exactly our heads
+        return kv
+    i = comm.axis_index(plan.tp_axis)
+    start = (i * h_loc * KV) // H
+    return lax.dynamic_slice_in_dim(kv, start, need, axis=2)
+
+
+def attention_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
+                      *, positions: jax.Array, cache: Optional[Dict] = None,
+                      window: int = 0, use_kernel: bool = False
+                      ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, T, d) -> (B, T, d). If ``cache`` given, appends this step's KV
+    (ring buffer) and attends over the cache; otherwise attends over x."""
+    B, T, _ = x.shape
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        # biases are sharded exactly like the matching projection outputs
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    h_loc = q.shape[2]
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        k_use = _kv_slice_for_my_heads(k, h_loc, H, KV, plan)
+        v_use = _kv_slice_for_my_heads(v, h_loc, H, KV, plan)
+        out = chunked_attention(q, k_use, v_use, positions, positions,
+                                causal=cfg.causal, window=window,
+                                use_kernel=use_kernel)
+        new_cache = None
+    elif cfg.kv_seq_shard and plan.tp > 1:
+        # beyond-paper: the cache's SEQUENCE dim is sharded over tp (flash-
+        # decoding style). Each rank owns a W/tp slice, scatters this step's
+        # KV into it iff the ring slot falls in its slice, attends over its
+        # slice only, and the softmax partials are merged with pmax/psum.
+        # Removes the KV-cache replication forced by kv_heads < tp and cuts
+        # per-chip cache memory and read traffic by ~tp.
+        Wl = cache["k"].shape[1]                 # local slice length
+        i = comm.axis_index(plan.tp_axis)
+        slot = positions % (Wl * max(plan.tp, 1)) - i * Wl      # (T,)
+        mine = (slot >= 0) & (slot < Wl)
+        safe = jnp.where(mine, slot, Wl)         # OOB -> dropped
+        ck = jax.vmap(lambda c, u: c.at[safe].set(u, mode="drop"),
+                      in_axes=(0, 0))(cache["k"], k)
+        cv = jax.vmap(lambda c, u: c.at[safe].set(u, mode="drop"),
+                      in_axes=(0, 0))(cache["v"], v)
+        cpos = cache["pos"].at[safe].set(positions, mode="drop")
+        # heads are ALSO tp-sharded, so per-rank partials would cover
+        # different heads: all-gather the (tiny: one token) queries, compute
+        # all-head partials over the local chunk, merge, slice our heads back.
+        q_full = comm.all_gather(q, plan.tp_axis, axis=2)       # (B,T,H,hd)
+        m, l, acc = chunked_attention(q_full, ck, cv, positions, cpos,
+                                      causal=cfg.causal, window=window,
+                                      return_partial=True)
+        out_full = merge_attention_partials(
+            m, l, acc, plan.tp_axis,
+            (q.shape[0], q.shape[1], q_full.shape[2], cv.shape[-1]), q.dtype)
+        out = lax.dynamic_slice_in_dim(
+            out_full, comm.axis_index(plan.tp_axis) * h_loc, h_loc, axis=2)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        W = cache["k"].shape[1]
+        slot = positions % W                                    # (T,)
+        ck = jax.vmap(lambda c, u: c.at[slot].set(u), in_axes=(0, 0))(cache["k"], k)
+        cv = jax.vmap(lambda c, u: c.at[slot].set(u), in_axes=(0, 0))(cache["v"], v)
+        cpos = cache["pos"].at[slot].set(positions)
+        k_use = _kv_slice_for_my_heads(ck, h_loc, H, KV, plan)
+        v_use = _kv_slice_for_my_heads(cv, h_loc, H, KV, plan)
+        out = chunked_attention(q, k_use, v_use, positions, cpos,
+                                causal=cfg.causal, window=window)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return comm.name_saved(comm.psum(y, plan.tp_axis)), new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, length: int,
+                         plan: MeshPlan, dtype=jnp.bfloat16) -> Dict:
+    """Ring-buffer cache sized ``length`` (= window for sliding attention).
+
+    GLOBAL shapes — the PartitionSpec rules in ``sharding.specs`` shard the
+    KV-head dim over tp; inside ``shard_map`` the leaf arrives local.
+    """
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, length, KV, hd), dtype),
+        "v": jnp.zeros((batch, length, KV, hd), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }
+
+
+# =============================================================================
+# MLA — Multi-head Latent Attention (deepseek-v3)
+# =============================================================================
+
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vhd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], (d, qr)),
+        "wq_b": dense_init(ks[1], (qr, H, nope + rope)),
+        "wkv_a": dense_init(ks[2], (d, kvr + rope)),
+        "wk_b": dense_init(ks[3], (kvr, H, nope)),
+        "wv_b": dense_init(ks[4], (kvr, H, vhd)),
+        "wo": dense_init(ks[5], (H, vhd, d), scale=1.0 / math.sqrt(H * vhd)),
+    }
+
+
+def mla_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
+                *, positions: jax.Array, cache: Optional[Dict] = None,
+                window: int = 0) -> Tuple[jax.Array, Optional[Dict]]:
+    """Latent attention: KV compressed to (kv_rank + rope) per token.
+
+    The cache stores only the compressed latent — MLA's whole point: the
+    500k-token cache is ~64x smaller than full GQA KV.
+    """
+    B, T, _ = x.shape
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    kvr = cfg.kv_lora_rank
+    q = jnp.einsum("btd,dr->btr", x, p["wq_a"].astype(x.dtype))
+    q = jnp.einsum("btr,rhk->bthk", q, p["wq_b"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)             # (B,T,Hloc,n+r)
+
+    kv = jnp.einsum("btd,dr->btr", x, p["wkv_a"].astype(x.dtype))
+    ckv, k_pe = kv[..., :kvr], kv[..., kvr:]
+    k_pe = apply_rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        W = cache["ckv"].shape[1]
+        slot = positions % W
+        ckv_all = jax.vmap(lambda c, u: c.at[slot].set(u))(cache["ckv"], ckv)
+        kpe_all = jax.vmap(lambda c, u: c.at[slot].set(u))(cache["kpe"], k_pe)
+        cpos = cache["pos"].at[slot].set(positions)
+        new_cache = {"ckv": ckv_all, "kpe": kpe_all, "pos": cpos}
+    else:
+        ckv_all, kpe_all, cpos = ckv, k_pe, positions
+        new_cache = None
+
+    if cache is not None and T == 1:
+        # ABSORBED decode (beyond-paper; EXPERIMENTS.md §Perf-3): fold W_UK
+        # into the query and W_UV into the output so attention runs directly
+        # over the compressed latent — the cache is never expanded to
+        # per-head K/V, cutting decode HBM reads ~H*(nope+v)/(kv_rank+rope).
+        scale = 1.0 / math.sqrt(nope + rope)
+        q_lat = jnp.einsum("bthk,rhk->bthr", q_nope,
+                           p["wk_b"].astype(x.dtype))           # (B,1,H,kvr)
+        s = (jnp.einsum("bthr,bsr->bths", q_lat, ckv_all)
+             + jnp.einsum("bthk,bsk->bths", q_rope, kpe_all))   # (B,1,H,W)
+        s = (s * scale).astype(jnp.float32)
+        mask = (cpos >= 0) & (cpos <= positions[-1])
+        if window:
+            mask &= (positions[-1] - cpos) < window
+        s = jnp.where(mask[None, None, None, :], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)                          # fp32 weights
+        o_lat = jnp.einsum("bths,bsr->bthr", a,
+                           ckv_all.astype(jnp.float32))         # (B,1,H,kvr)
+        out = jnp.einsum("bthr,rhk->bthk", o_lat.astype(x.dtype),
+                         p["wv_b"].astype(x.dtype))             # (B,1,H,vhd)
+    else:
+        # naive path (prefill/training): reconstruct per-head K/V from the
+        # latent. wk_b/wv_b are head-sharded so this yields local heads.
+        k_nope = jnp.einsum("btr,rhk->bthk", ckv_all, p["wk_b"].astype(x.dtype))
+        v = jnp.einsum("btr,rhk->bthk", ckv_all, p["wv_b"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe_all[:, :, None, :],
+                                      k_nope.shape[:3] + (rope,))], axis=-1)
+        out = chunked_attention(q, k, v, positions, cpos, causal=cfg.causal,
+                                window=window)
+    y = jnp.einsum("bthk,hkd->btd", out, p["wo"].astype(x.dtype))
+    return comm.name_saved(comm.psum(y, plan.tp_axis)), new_cache
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, length: int,
+                   plan: MeshPlan, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, length, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((length,), -1, jnp.int32),
+    }

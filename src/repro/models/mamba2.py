@@ -1,0 +1,176 @@
+"""Mamba2 (SSD — state-space dual) block, single-group, tensor-parallel.
+
+Used by the zamba2 hybrid architecture. Heads (= d_inner/head_dim) are
+sharded over the tensor-parallel axis; the B/C state projections are shared
+across heads (single group) and computed replicated.
+
+Training/prefill uses the chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk state recurrence via ``lax.scan``); decode is the O(1) recurrent
+step. Both maintain the same ``(ssm, conv_*)`` cache structure so prefill can
+hand off to decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig, SSMConfig
+from repro.models.layers import dense_init, apply_norm
+from repro.sharding import comm
+from repro.sharding.plan import MeshPlan
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    ks = jax.random.split(key, 10)
+    return {
+        "wx": dense_init(ks[0], (d, d_in)),
+        "wz": dense_init(ks[1], (d, d_in)),
+        "wB": dense_init(ks[2], (d, s.d_state)),
+        "wC": dense_init(ks[3], (d, s.d_state)),
+        "wdt": dense_init(ks[4], (d, nh)),
+        "conv_x": dense_init(ks[5], (d_in, s.d_conv), scale=0.5),
+        "conv_B": dense_init(ks[6], (s.d_state, s.d_conv), scale=0.5),
+        "conv_C": dense_init(ks[7], (s.d_state, s.d_conv), scale=0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((d_in,), jnp.float32)},
+        "wo": dense_init(ks[8], (d_in, d)),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B, T, C); w: (C, W). Returns (y, new_state)
+    where state carries the trailing W-1 inputs."""
+    B, T, C = x.shape
+    W = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                   # (B, T+W-1, C)
+    y = sum(xp[:, j:j + T, :] * w[:, j].astype(x.dtype) for j in range(W))
+    return y, xp[:, -(W - 1):, :]
+
+
+def mamba2_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
+                   *, cache: Optional[Dict] = None
+                   ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, T, d) -> (B, T, d). Chunked SSD; heads sharded over tp."""
+    s = cfg.ssm
+    B, T, d = x.shape
+    hd, ds = s.head_dim, s.d_state
+
+    xs = jnp.einsum("btd,di->bti", x, p["wx"].astype(x.dtype))  # (B,T,d_in_loc)
+    z = jnp.einsum("btd,di->bti", x, p["wz"].astype(x.dtype))
+    Bp = jnp.einsum("btd,dn->btn", x, p["wB"].astype(x.dtype))  # replicated
+    Cp = jnp.einsum("btd,dn->btn", x, p["wC"].astype(x.dtype))
+    dt = jnp.einsum("btd,dh->bth", x, p["wdt"].astype(x.dtype)) # (B,T,nh_loc)
+
+    conv_state = cache or {}
+    xs, st_x = _causal_conv(xs, p["conv_x"], conv_state.get("conv_x"))
+    Bp, st_B = _causal_conv(Bp, p["conv_B"], conv_state.get("conv_B"))
+    Cp, st_C = _causal_conv(Cp, p["conv_C"], conv_state.get("conv_C"))
+    xs, Bp, Cp = jax.nn.silu(xs), jax.nn.silu(Bp), jax.nn.silu(Cp)
+
+    nh = dt.shape[-1]
+    xh = xs.reshape(B, T, nh, hd).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,nh)
+    A = -jnp.exp(p["A_log"])                                     # (nh,)
+    loga = dt * A                                                # (B,T,nh) <= 0
+    Bf, Cf = Bp.astype(jnp.float32), Cp.astype(jnp.float32)
+
+    ssm0 = None
+    if cache is not None and "ssm" in cache:
+        ssm0 = cache["ssm"].astype(jnp.float32)                  # (B,nh,hd,ds)
+    if ssm0 is None:
+        ssm0 = jnp.zeros((B, nh, hd, ds), jnp.float32)
+
+    if T == 1 and cache is not None:
+        # O(1) decode step
+        a = jnp.exp(loga[:, 0])                                  # (B,nh)
+        dx = dt[:, 0, :, None] * xh[:, 0]                        # (B,nh,hd)
+        ssm = (a[..., None, None] * ssm0
+               + dx[..., None] * Bf[:, 0, None, None, :])
+        y = jnp.einsum("bhpn,bn->bhp", ssm, Cf[:, 0])
+        y = y + p["D"][None, :, None] * xh[:, 0]
+        y = y.reshape(B, 1, nh * hd)
+    else:
+        Q = min(s.chunk, T)
+        assert T % Q == 0, f"T={T} must be divisible by ssd chunk {Q}"
+        nc = T // Q
+        xq = xh.reshape(B, nc, Q, nh, hd)
+        dq = dt.reshape(B, nc, Q, nh)
+        lq = loga.reshape(B, nc, Q, nh)
+        Bq = Bf.reshape(B, nc, Q, ds)
+        Cq = Cf.reshape(B, nc, Q, ds)
+        cs = jnp.cumsum(lq, axis=2)                              # (B,nc,Q,nh)
+
+        # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cs_i - cs_j) dt_j x_j
+        scores = jnp.einsum("bcin,bcjn->bcij", Cq, Bq)           # (B,nc,Q,Q)
+        decay = cs[:, :, :, None, :] - cs[:, :, None, :, :]      # (B,nc,i,j,nh)
+        mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        decay = jnp.where(mask[None, None, :, :, None], decay, -jnp.inf)
+        w_ij = jnp.exp(decay) * scores[..., None]                # (B,nc,i,j,nh)
+        y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", w_ij, dq, xq)
+
+        # chunk summary states + inter-chunk recurrence
+        tail = cs[:, :, -1:, :] - cs                             # decay to end
+        sB = jnp.einsum("bcjh,bcjh,bcjhp,bcjn->bchpn",
+                        jnp.exp(tail), dq, xq, Bq)               # (B,nc,nh,hd,ds)
+        a_chunk = jnp.exp(cs[:, :, -1, :])                       # (B,nc,nh)
+
+        def scan_fn(h, inp):
+            sB_c, a_c = inp
+            h_new = a_c[..., None, None] * h + sB_c
+            return h_new, h                                      # emit state BEFORE chunk
+        (h_last, h_prev) = lax.scan(
+            scan_fn, ssm0,
+            (sB.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2)))
+        h_prev = h_prev.transpose(1, 0, 2, 3, 4)                 # (B,nc,nh,hd,ds)
+
+        y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                             Cq, h_prev, jnp.exp(cs))
+        y = y_intra + y_inter + p["D"][None, None, None, :, None] * xq
+        y = y.reshape(B, T, nh * hd)
+        ssm = h_last
+
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    # gated RMSNorm over the FULL d_inner — the feature dim is tp-sharded,
+    # so the mean-square is psum'd across the tensor-parallel axis.
+    yf = y.astype(jnp.float32)
+    d_in_local = yf.shape[-1]
+    ss = comm.psum(jnp.sum(yf * yf, axis=-1, keepdims=True), plan.tp_axis)
+    denom = d_in_local * max(plan.tp, 1)
+    y = (yf * lax.rsqrt(ss / denom + 1e-5)
+         * p["norm"]["scale"]).astype(x.dtype)
+    out = jnp.einsum("bti,id->btd", y, p["wo"].astype(x.dtype))
+    out = comm.name_saved(comm.psum(out, plan.tp_axis))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"ssm": ssm.astype(jnp.float32),
+                     "conv_x": st_x, "conv_B": st_B, "conv_C": st_C}
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, plan: MeshPlan,
+                      dtype=jnp.bfloat16) -> Dict:
+    # GLOBAL shapes; sharded over tp by the cache PartitionSpec rules.
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    return {
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv_x": jnp.zeros((batch, s.d_conv - 1, d_in), dtype),
+        "conv_B": jnp.zeros((batch, s.d_conv - 1, s.d_state), dtype),
+        "conv_C": jnp.zeros((batch, s.d_conv - 1, s.d_state), dtype),
+    }

@@ -1,0 +1,158 @@
+"""RWKV6 ("Finch") block — attention-free, data-dependent decay.
+
+Time-mix: per-head matrix-valued state ``S in R^{hd x hd}`` with
+``S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] v_t[j]`` and readout
+``y_t[j] = sum_i r_t[i] (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])`` where the decay
+``w_t = exp(-exp(w0 + lora_w(x)))`` is data-dependent (the Finch change vs
+RWKV5). Channel-mix is the squared-ReLU RWKV FFN.
+
+Heads are sharded over the tensor-parallel axis; channel-mix hidden dim is
+sharded Megatron-style. The sequential recurrence uses ``lax.scan`` (the
+Pallas chunked kernel in ``repro.kernels.rwkv6_scan`` is the TPU fast path
+and is validated against this reference).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.common.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.sharding import comm
+from repro.sharding.plan import MeshPlan
+
+MIXES = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv_tmix(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    r = cfg.rwkv
+    nh = d // r.head_dim
+    ks = jax.random.split(key, 12)
+    p = {
+        "mu": jnp.full((5, d), 0.5, jnp.float32),         # static shift mixes
+        "mix_a": dense_init(ks[0], (d, 5 * r.mix_lora), scale=0.01),
+        "mix_b": dense_init(ks[1], (5, r.mix_lora, d), scale=0.01),
+        "wr": dense_init(ks[2], (d, nh, r.head_dim)),
+        "wk": dense_init(ks[3], (d, nh, r.head_dim)),
+        "wv": dense_init(ks[4], (d, nh, r.head_dim)),
+        "wg": dense_init(ks[5], (d, nh, r.head_dim)),
+        "w0": jnp.full((nh, r.head_dim), -1.0, jnp.float32),
+        "decay_a": dense_init(ks[6], (d, r.decay_lora), scale=0.01),
+        "decay_b": dense_init(ks[7], (r.decay_lora, nh, r.head_dim), scale=0.01),
+        "u": jnp.zeros((nh, r.head_dim), jnp.float32),    # bonus ("time_faaaa")
+        "ln_x": {"scale": jnp.ones((nh, r.head_dim), jnp.float32),
+                 "bias": jnp.zeros((nh, r.head_dim), jnp.float32)},
+        "wo": dense_init(ks[8], (nh, r.head_dim, d)),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, x_prev: Optional[jax.Array]) -> jax.Array:
+    """Return the previous token's features (zeros / cache at position 0)."""
+    if x_prev is None:
+        x_prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def rwkv_tmix_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
+                      *, cache: Optional[Dict] = None,
+                      use_kernel: bool = False
+                      ) -> Tuple[jax.Array, Optional[Dict]]:
+    B, T, d = x.shape
+    r = cfg.rwkv
+    hd = r.head_dim
+    xf = x.astype(jnp.float32)
+    prev = _token_shift(xf, None if cache is None else cache["x_prev_t"])
+    dx = prev - xf
+    # data-dependent interpolation between x and x_prev, one mix per use
+    lora = jnp.tanh(jnp.einsum("btd,dl->btl", xf, p["mix_a"])
+                    .reshape(B, T, 5, r.mix_lora))
+    mixes = p["mu"][None, None] + jnp.einsum("btml,mld->btmd", lora, p["mix_b"])
+    xs = xf[:, :, None, :] + dx[:, :, None, :] * mixes        # (B,T,5,d)
+    xr, xk, xv, xw, xg = [xs[:, :, i] for i in range(5)]
+
+    rv = jnp.einsum("btd,dhk->bthk", xr, p["wr"])              # (B,T,nh_loc,hd)
+    kv = jnp.einsum("btd,dhk->bthk", xk, p["wk"])
+    vv = jnp.einsum("btd,dhk->bthk", xv, p["wv"])
+    gv = jax.nn.silu(jnp.einsum("btd,dhk->bthk", xg, p["wg"]))
+    dec = p["w0"][None, None] + jnp.einsum(
+        "btl,lhk->bthk", jnp.tanh(xw @ p["decay_a"]), p["decay_b"])
+    w = jnp.exp(-jnp.exp(dec))                                 # (B,T,nh,hd) in (0,1)
+
+    nh = rv.shape[2]
+    s0 = (cache["wkv"].astype(jnp.float32) if cache is not None
+          else jnp.zeros((B, nh, hd, hd), jnp.float32))
+
+    if use_kernel and cache is None:
+        from repro.kernels import ops as kops
+        y, s_last = kops.rwkv6_scan(rv, kv, vv, w, p["u"], s0)
+    else:
+        def step(s, inp):
+            rt, kt, vt, wt = inp                                # (B,nh,hd)
+            kvt = kt[..., :, None] * vt[..., None, :]           # (B,nh,hd,hd)
+            y = jnp.einsum("bhi,bhij->bhj", rt,
+                           s + p["u"][None, :, :, None] * kvt)
+            s_new = wt[..., :, None] * s + kvt
+            return s_new, y
+        (s_last, ys) = lax.scan(
+            step, s0, (rv.transpose(1, 0, 2, 3), kv.transpose(1, 0, 2, 3),
+                       vv.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)))
+        y = ys.transpose(1, 0, 2, 3)                            # (B,T,nh,hd)
+
+    # per-head group norm, then gate and output projection
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    y = (y - mu) * lax.rsqrt(var + 1e-5) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    y = (y * gv).astype(x.dtype)
+    out = jnp.einsum("bthk,hkd->btd", y, p["wo"].astype(x.dtype))
+    out = comm.name_saved(comm.psum(out, plan.tp_axis))
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"wkv": s_last, "x_prev_t": xf[:, -1:]}
+    return out, new_cache
+
+
+def init_rwkv_cmix(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], (d, f)),
+        "wv": dense_init(ks[1], (f, d)),
+        "wr": dense_init(ks[2], (d, d)),
+    }
+
+
+def rwkv_cmix_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
+                      *, cache: Optional[Dict] = None
+                      ) -> Tuple[jax.Array, Optional[Dict]]:
+    xf = x.astype(jnp.float32)
+    prev = _token_shift(xf, None if cache is None else cache["x_prev_c"])
+    dx = prev - xf
+    xk = xf + dx * p["mu_k"]
+    xr = xf + dx * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))                  # (B,T,f_loc)
+    kv = comm.name_saved(comm.psum(k @ p["wv"], plan.tp_axis))
+    rr = jax.nn.sigmoid(xr @ p["wr"])
+    out = (rr * kv).astype(x.dtype)
+    new_cache = {"x_prev_c": xf[:, -1:]} if cache is not None else None
+    return out, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, plan: MeshPlan) -> Dict:
+    # GLOBAL shapes; sharded over tp by the cache PartitionSpec rules.
+    d = cfg.d_model
+    r = cfg.rwkv
+    nh = d // r.head_dim
+    return {
+        "wkv": jnp.zeros((batch, nh, r.head_dim, r.head_dim), jnp.float32),
+        "x_prev_t": jnp.zeros((batch, 1, d), jnp.float32),
+        "x_prev_c": jnp.zeros((batch, 1, d), jnp.float32),
+    }

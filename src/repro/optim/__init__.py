@@ -1,0 +1,9 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adamw,
+    lamb,
+    make_optimizer,
+)
+from repro.optim.schedule import make_schedule
+
+__all__ = ["Optimizer", "adamw", "lamb", "make_optimizer", "make_schedule"]

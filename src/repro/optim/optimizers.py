@@ -1,0 +1,136 @@
+"""Optimizers, built from scratch in JAX (no optax dependency).
+
+LAMB is the paper's optimizer (§4.1, [20]); AdamW is provided for the
+assigned decoder archs. Both operate leaf-wise on sharded parameters, so the
+update runs inside ``shard_map`` without extra communication (the trust-ratio
+norms in LAMB are per-leaf; sharded leaves psum their norms over the axes the
+leaf is sharded on — supplied by the caller via ``shard_axes``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import comm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]      # (grads, state, params, lr, shard_axes) -> (params, state)
+
+
+class _Up:
+    """Per-leaf update carrier (params pytrees contain tuples, so plain
+    tuples cannot be used as tree.map leaf markers)."""
+    __slots__ = ("p", "m", "v")
+
+    def __init__(self, p, m, v):
+        self.p, self.m, self.v = p, m, v
+
+
+def _split_updates(out):
+    is_up = lambda t: isinstance(t, _Up)
+    return (jax.tree.map(lambda t: t.p, out, is_leaf=is_up),
+            jax.tree.map(lambda t: t.m, out, is_leaf=is_up),
+            jax.tree.map(lambda t: t.v, out, is_leaf=is_up))
+
+
+def _moments_init(params):
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _adam_dir(g, m, v, step, b1, b2, eps):
+    g = g.astype(jnp.float32)
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * jnp.square(g)
+    mh = m / (1 - b1 ** step)
+    vh = v / (1 - b2 ** step)
+    return mh / (jnp.sqrt(vh) + eps), m, v
+
+
+def adamw(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    def init(params):
+        return _moments_init(params)
+
+    def update(grads, state, params, lr, shard_axes=None):
+        step = state["step"] + 1
+
+        def leaf(g, m, v, p):
+            d, m2, v2 = _adam_dir(g, m, v, step.astype(jnp.float32), b1, b2, eps)
+            if weight_decay and p.ndim >= 2:
+                d = d + weight_decay * p.astype(jnp.float32)
+            return _Up((p.astype(jnp.float32) - lr * d).astype(p.dtype), m2, v2)
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        new_p, new_m, new_v = _split_updates(out)
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def lamb(b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01,
+         min_trust=0.0, max_trust=10.0) -> Optimizer:
+    """LAMB [You et al. 2019] — the paper's optimizer.
+
+    ``shard_axes`` maps each leaf to the mesh axes its data is sharded over;
+    the trust-ratio norms are psum'd over those axes so sharded leaves see
+    their *global* norms (a leaf sharded over 'model' computes the same trust
+    ratio every shard — required for replicated-consistent updates).
+    """
+    def init(params):
+        return _moments_init(params)
+
+    def update(grads, state, params, lr, shard_axes=None):
+        step = state["step"] + 1
+
+        def leaf(g, m, v, p, axes):
+            d, m2, v2 = _adam_dir(g, m, v, step.astype(jnp.float32), b1, b2, eps)
+            pf = p.astype(jnp.float32)
+            if weight_decay and p.ndim >= 2:
+                d = d + weight_decay * pf
+            wn = comm.psum(jnp.sum(jnp.square(pf)), axes)
+            dn = comm.psum(jnp.sum(jnp.square(d)), axes)
+            wn, dn = jnp.sqrt(wn), jnp.sqrt(dn)
+            trust = jnp.where((wn > 0) & (dn > 0),
+                              jnp.clip(wn / jnp.maximum(dn, 1e-12),
+                                       min_trust, max_trust), 1.0)
+            return _Up((pf - lr * trust * d).astype(p.dtype), m2, v2)
+
+        if shard_axes is None:
+            shard_axes = jax.tree.map(lambda _: (), params)
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params,
+                           shard_axes,
+                           is_leaf=lambda x: isinstance(x, jax.Array))
+        new_p, new_m, new_v = _split_updates(out)
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, *, weight_decay=0.01, b1=0.9, b2=0.999,
+                   eps=1e-6) -> Optimizer:
+    if name == "lamb":
+        return lamb(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    if name == "adamw":
+        return adamw(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def clip_by_global_norm(grads, max_norm: float, shard_axes=None):
+    """Global-norm clip; norms psum'd per-leaf over the leaf's shard axes
+    (leaves replicated elsewhere contribute identically on every device)."""
+    if shard_axes is None:
+        shard_axes = jax.tree.map(lambda _: (), grads)
+    sq = jax.tree.map(
+        lambda g, a: comm.psum(jnp.sum(jnp.square(g.astype(jnp.float32))), a),
+        grads, shard_axes, is_leaf=lambda x: isinstance(x, jax.Array))
+    total = jnp.sqrt(sum(jax.tree.leaves(sq)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), total

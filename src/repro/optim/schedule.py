@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure functions of the int step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def make_schedule(kind: str, base_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        w = float(warmup)
+        warm = base_lr * jnp.minimum(step / max(w, 1.0), 1.0)
+        frac = jnp.clip((step - w) / max(total - w, 1.0), 0.0, 1.0)
+        if kind == "cosine":
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        elif kind == "linear":
+            decay = 1.0 - frac
+        else:
+            decay = 1.0
+        return jnp.where(step < w, warm, base_lr * decay)
+    return fn

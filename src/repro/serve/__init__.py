@@ -1,0 +1,10 @@
+from repro.serve.decode import (
+    build_decode_step,
+    build_prefill,
+    decode_step_fn,
+    greedy_sample,
+    prefill_fn,
+)
+
+__all__ = ["build_decode_step", "build_prefill", "decode_step_fn",
+           "greedy_sample", "prefill_fn"]

@@ -1,0 +1,142 @@
+"""Collective-communication abstraction.
+
+Every collective the framework issues goes through these helpers. Passing a
+plan whose axes are empty (``single_device_plan()``) turns each helper into the
+identity, so the exact same model code doubles as the pure-jnp single-device
+oracle used by unit tests and kernel references.
+
+This mirrors the paper's process-group design (Fig. 5): instead of
+``inter_node_process_group`` / ``intra_node_process_group`` objects, a named
+mesh axis *is* the process group, and ``jax.lax`` collectives over an axis
+tuple are the group collectives.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.ad_checkpoint import checkpoint_name
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+def _norm(axes: Axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+def psum(x, axes: Axes, axis_index_groups=None):
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.psum(x, axes, axis_index_groups=axis_index_groups)
+
+
+def pmean(x, axes: Axes):
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.pmean(x, axes)
+
+
+def pmax(x, axes: Axes):
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.pmax(x, axes)
+
+
+def all_gather(x, axes: Axes, *, axis: int = 0, tiled: bool = True):
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.all_gather(x, axes, axis=axis, tiled=tiled)
+
+
+def psum_scatter(x, axes: Axes, *, scatter_dimension: int = 0, tiled: bool = True):
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.psum_scatter(x, axes, scatter_dimension=scatter_dimension,
+                            tiled=tiled)
+
+
+def all_to_all(x, axes: Axes, *, split_axis: int, concat_axis: int,
+               tiled: bool = False):
+    """All2All over ``axes``. Identity when the group size is 1.
+
+    With ``tiled=False`` the ``split_axis`` dim must equal the group size and
+    is consumed/produced whole: local ``(G, ...)`` -> received ``(G, ...)``
+    where the leading index becomes the *source* group rank.
+    """
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.all_to_all(x, axes, split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=tiled)
+
+
+def axis_index(axes: Axes):
+    axes = _norm(axes)
+    if not axes:
+        return jnp.int32(0)
+    return lax.axis_index(axes)
+
+
+SAVED_COLLECTIVE = "tp_collective"
+
+
+def name_saved(x):
+    """Tag a collective output for the ``remat_save_collectives`` policy:
+    under remat, the backward pass replays the forward — including its
+    psums/all_gathers, doubling wire traffic. Saving exactly these outputs
+    keeps remat's memory win while removing the re-communication."""
+    return checkpoint_name(x, SAVED_COLLECTIVE)
+
+
+def save_collectives_policy():
+    return jax.checkpoint_policies.save_only_these_names(SAVED_COLLECTIVE)
+
+
+def ppermute(x, axes: Axes, perm):
+    axes = _norm(axes)
+    if not axes:
+        return x
+    return lax.ppermute(x, axes, perm=perm)
+
+
+# ---------------------------------------------------------------- token split
+def split_tokens(x, plan_axes: Axes, size: int):
+    """Evenly split the leading (token) dim of ``x`` across ``plan_axes``.
+
+    Pads to a multiple of ``size`` when needed; returns ``(local, pad)`` where
+    ``pad`` is the number of padding rows appended *globally* (the local shard
+    of this device may or may not contain padding — callers mask via the
+    returned valid length arithmetic). Used to convert tensor-parallel
+    replicated activations into expert-parallel token shards for the MoE block
+    (the paper's "each worker owns a slice of the batch").
+    """
+    axes = _norm(plan_axes)
+    t = x.shape[0]
+    pad = (-t) % size
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    if not axes:
+        return x, pad
+    idx = lax.axis_index(axes)
+    per = x.shape[0] // size
+    local = lax.dynamic_slice_in_dim(x, idx * per, per, axis=0)
+    return local, pad
+
+
+def unsplit_tokens(local, plan_axes: Axes, orig_len: int):
+    """Inverse of :func:`split_tokens`: all_gather shards and drop padding."""
+    axes = _norm(plan_axes)
+    if axes:
+        local = lax.all_gather(local, axes, axis=0, tiled=True)
+    return local[:orig_len]

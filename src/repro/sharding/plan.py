@@ -1,0 +1,123 @@
+"""MeshPlan: how logical parallelism roles map onto mesh axes.
+
+The paper's bi-level routing factorizes a flat expert-parallel All2All over
+``N = n x m`` workers into two levels: an inter-node level (slow fabric) and an
+intra-node level (fast fabric).  On TPU we express both levels as *mesh axes*.
+
+A :class:`MeshPlan` names, for one concrete mesh:
+
+* ``dp_axes``   — pure data-parallel axes (batch sharding + gradient reduction)
+* ``tp_axis``   — tensor-parallel axis for dense blocks (Megatron style)
+* ``ep_inter``  — SMILE level-1 ("node") axes. All2All #1 runs here.
+* ``ep_intra``  — SMILE level-2 ("GPU-within-node") axes. All2All #2 runs here.
+
+For the production single-pod mesh ``(data=16, model=16)``:
+``dp=("data",), tp="model", ep_inter=("data",), ep_intra=("model",)`` —
+expert grid 16 x 16 = 256 slots, exactly the paper's ``n x m`` layout where a
+worker owns one expert *and* a slice of the batch (hybrid data+expert
+parallelism, paper §2).
+
+With mesh axes of size one (or no mesh at all) every collective in
+:mod:`repro.sharding.comm` degenerates to the identity, giving the
+single-device oracle used by unit tests — one code path for both.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    dp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+    ep_inter: Tuple[str, ...] = ()
+    ep_intra: Tuple[str, ...] = ()
+    axis_sizes: Tuple[Tuple[str, int], ...] = ()   # frozen dict of axis -> size
+
+    # ------------------------------------------------------------------ sizes
+    def size(self, axes) -> int:
+        if axes is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        d = dict(self.axis_sizes)
+        p = 1
+        for a in axes:
+            p *= d.get(a, 1)
+        return p
+
+    @property
+    def dp(self) -> int:
+        return self.size(self.dp_axes)
+
+    @property
+    def tp(self) -> int:
+        return self.size(self.tp_axis)
+
+    @property
+    def n_inter(self) -> int:
+        """Number of "nodes" (paper's n)."""
+        return self.size(self.ep_inter)
+
+    @property
+    def n_intra(self) -> int:
+        """Workers per node (paper's m)."""
+        return self.size(self.ep_intra)
+
+    @property
+    def ep(self) -> int:
+        """Total expert-parallel grid slots N = n x m."""
+        return self.n_inter * self.n_intra
+
+    @property
+    def ep_axes(self) -> Tuple[str, ...]:
+        return tuple(self.ep_inter) + tuple(self.ep_intra)
+
+    @property
+    def all_axes(self) -> Tuple[str, ...]:
+        return tuple(a for a, _ in self.axis_sizes)
+
+    def tp_axes(self) -> Tuple[str, ...]:
+        return (self.tp_axis,) if self.tp_axis else ()
+
+
+def plan_from_mesh(mesh: jax.sharding.Mesh,
+                   *,
+                   smile_inter_axes: Optional[Tuple[str, ...]] = None) -> MeshPlan:
+    """Build the canonical plan for a mesh.
+
+    Axis conventions: ``model`` is tensor-parallel / SMILE-intra; all remaining
+    axes (``pod``, ``data``) are data-parallel; SMILE-inter defaults to
+    ``("data",)`` so that the expert grid is ``data x model``. Pass
+    ``smile_inter_axes=("pod", "data")`` to route level-1 across the DCN pod
+    axis too (512-slot grid on the multi-pod mesh).
+    """
+    names = tuple(mesh.axis_names)
+    sizes = tuple((a, int(mesh.shape[a])) for a in names)
+    tp = "model" if "model" in names else None
+    dp = tuple(a for a in names if a != "model")
+    if smile_inter_axes is None:
+        smile_inter_axes = ("data",) if "data" in names else dp
+    inter = tuple(a for a in smile_inter_axes if a in names)
+    intra = ("model",) if tp else ()
+    return MeshPlan(dp_axes=dp, tp_axis=tp, ep_inter=inter, ep_intra=intra,
+                    axis_sizes=sizes)
+
+
+def single_device_plan() -> MeshPlan:
+    """Oracle plan: no named axes; every collective is the identity."""
+    return MeshPlan()
+
+
+def test_plan(n_inter: int = 2, n_intra: int = 2, pod: int = 0) -> MeshPlan:
+    """Plan + axis sizes for small fake-device test meshes."""
+    sizes = []
+    if pod:
+        sizes.append(("pod", pod))
+    sizes += [("data", n_inter), ("model", n_intra)]
+    dp = tuple(a for a, _ in sizes if a != "model")
+    return MeshPlan(dp_axes=dp, tp_axis="model", ep_inter=("data",),
+                    ep_intra=("model",), axis_sizes=tuple(sizes))

@@ -1,0 +1,262 @@
+"""PartitionSpec rules: map every parameter / cache / batch leaf to its spec.
+
+Rules are keyed on the leaf's path tail (parent key + leaf name) and specify
+the spec of the *trailing* dims; leading stacked dims (scan-over-layers) are
+padded with ``None``. ``shard_axes(...)`` inverts a spec tree into "which mesh
+axes is this leaf replicated over" — exactly the axes its gradient must be
+psum'd over inside the manual-collectives train step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.common.config import InputShape, ModelConfig
+from repro.sharding.plan import MeshPlan
+
+
+def _expert_spec(cfg: ModelConfig, plan: MeshPlan) -> Tuple:
+    from repro.core.layout import make_layout
+    from repro.core.moe import _grid
+    n_g, m_g = _grid(cfg.moe, plan)
+    layout = make_layout(cfg.moe.num_experts, n_g, m_g)
+    inter = tuple(plan.ep_inter) or None
+    intra = (tuple(plan.ep_intra) or None) if layout.shard_intra else None
+    return (inter if inter and len(inter) > 1 else (inter[0] if inter else None),
+            intra if intra and len(intra) > 1 else (intra[0] if intra else None),
+            None, None)
+
+
+def param_spec_rules(cfg: ModelConfig, plan: MeshPlan):
+    """Return fn(path_tuple, ndim) -> PartitionSpec for parameter leaves."""
+    tp = plan.tp_axis
+    # under kv_seq_shard the cache keeps ALL KV heads locally (the sequence
+    # dim is the sharded one), so the KV projections must stay replicated
+    kv_ok = (cfg.num_kv_heads % max(plan.tp, 1) == 0
+             and not getattr(cfg, "kv_seq_shard", False))
+    nh_rwkv_ok = (cfg.rwkv is None
+                  or (cfg.d_model // cfg.rwkv.head_dim) % max(plan.tp, 1) == 0)
+    espec = _expert_spec(cfg, plan) if (cfg.moe and cfg.moe.num_experts) else None
+
+    def base(parent: str, name: str) -> Optional[Tuple]:
+        # --- embeddings / heads -------------------------------------------
+        if parent == "embed" and name == "table":
+            if cfg.num_codebooks > 1:
+                return (None, tp, None)
+            return (tp, None)
+        if parent == "heads" and name == "w":
+            return (None, tp, None)
+        if parent == "lm_head" and name == "w":
+            return (tp, None)
+        if parent == "vision_proj":
+            return (None, None)
+        # --- MoE ------------------------------------------------------------
+        if parent == "experts":
+            return espec
+        if parent in ("router", "router_inter", "router_intra"):
+            return (None, None)
+        # --- rwkv (parent-specific; must precede generic attention rules) ---
+        if parent == "tmix":
+            if name in ("wr", "wk", "wv", "wg"):
+                return (None, tp if nh_rwkv_ok else None, None)
+            if name == "wo":
+                return (tp if nh_rwkv_ok else None, None, None)
+        if parent == "cmix":
+            if name == "wk":
+                return (None, tp)
+            if name == "wv":
+                return (tp, None)
+            return None                     # wr, mu_* replicated
+        # --- attention -------------------------------------------------------
+        if name == "wq":
+            return (None, tp, None)
+        if name in ("wk", "wv"):
+            return (None, tp if kv_ok else None, None)
+        if name == "wo" and parent in ("attn", "block"):
+            return (tp, None, None)
+        if name == "bq":
+            return (tp, None)
+        if name in ("bk", "bv"):
+            return (tp if kv_ok else None, None)
+        # MLA
+        if name in ("wq_a", "wkv_a"):
+            return (None, None)
+        if name in ("wq_b", "wk_b", "wv_b"):
+            return (None, tp, None)
+        # --- dense / shared FFN ------------------------------------------------
+        if parent == "shared":
+            return None      # shared expert runs on token-split shards,
+                             # weights replicated (see moe_block)
+        if name in ("w1", "w3"):
+            return (None, tp)
+        if name == "w2":
+            return (tp, None)
+        # --- mamba2 --------------------------------------------------------------
+        if name in ("wx", "wz", "wdt"):
+            return (None, tp)
+        if name in ("wB", "wC", "conv_B", "conv_C"):
+            return (None, None)
+        if name == "conv_x":
+            return (tp, None)
+        if name in ("A_log", "D", "dt_bias"):
+            return (tp,)
+        if parent == "mamba" and name == "wo":
+            return (tp, None)
+        if parent == "norm" and name == "scale":
+            return (tp,)                       # mamba gated norm over d_in
+        # --- rwkv (remaining time-mix leaves) --------------------------------
+        if name in ("w0", "u"):
+            return (tp if nh_rwkv_ok else None, None)
+        if name == "decay_b":
+            return (None, tp if nh_rwkv_ok else None, None)
+        if parent == "ln_x":
+            return (tp if nh_rwkv_ok else None, None)
+        if name in ("mu", "mix_a", "mix_b", "decay_a"):
+            return None
+        # --- misc ----------------------------------------------------------------
+        if name in ("scale", "bias", "proj"):
+            return None
+        return None
+
+    def rule(path: Tuple[str, ...], ndim: int) -> P:
+        parent = path[-2] if len(path) >= 2 else ""
+        name = path[-1]
+        b = base(parent, name)
+        if b is None:
+            return P()
+        pad = ndim - len(b)
+        assert pad >= 0, (path, ndim, b)
+        return P(*((None,) * pad + tuple(b)))
+
+    return rule
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+        elif hasattr(k, "name"):
+            out.append(str(k.name))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def param_specs(params_tree, cfg: ModelConfig, plan: MeshPlan):
+    """Spec pytree matching ``params_tree`` (arrays or ShapeDtypeStructs)."""
+    rule = param_spec_rules(cfg, plan)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = [rule(_path_names(p), np.ndim(l) if not hasattr(l, "ndim") else l.ndim)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def shard_axes(spec_tree, plan: MeshPlan):
+    """For each leaf: the mesh axes it is REPLICATED over (grad-sync axes)."""
+    every = set(plan.all_axes)
+
+    def one(spec: P):
+        used = set()
+        for entry in spec:
+            if entry is None:
+                continue
+            if isinstance(entry, (tuple, list)):
+                used.update(entry)
+            else:
+                used.add(entry)
+        return tuple(a for a in plan.all_axes if a in (every - used))
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sharded_axes_only(spec_tree, plan: MeshPlan):
+    """For each leaf: the mesh axes it IS sharded over (norm-sync axes)."""
+    def one(spec: P):
+        used = []
+        for entry in spec:
+            if entry is None:
+                continue
+            if isinstance(entry, (tuple, list)):
+                used.extend(entry)
+            else:
+                used.append(entry)
+        return tuple(used)
+
+    return jax.tree.map(one, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+# =============================================================================
+# Batch / cache specs
+# =============================================================================
+
+def batch_dim_spec(batch: int, plan: MeshPlan):
+    """Shard the batch over dp axes when divisible, else replicate."""
+    dp = plan.dp_axes
+    if dp and batch % plan.dp == 0:
+        return tuple(dp) if len(dp) > 1 else dp[0]
+    return None
+
+
+def batch_specs(batch_tree, plan: MeshPlan):
+    def one(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        return P(*((batch_dim_spec(b, plan),) + (None,) * max(leaf.ndim - 1, 0)))
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_specs(cache_tree, cfg: ModelConfig, plan: MeshPlan, batch: int):
+    """Decode caches: batch over dp; head-ish dims over tp where divisible.
+
+    Cache layouts (after per-stage stacking prepends 1-2 scan dims):
+      attn k/v: (B, W, KV, hd)   mla ckv/kpe: (B, W, r)   pos: (W,)
+      mamba ssm: (B, nh, hd, ds) conv_*: (B, W-1, C)
+      rwkv wkv: (B, nh, hd, hd)  x_prev_*: (B, 1, d)
+    """
+    tp = plan.tp_axis
+    bspec = batch_dim_spec(batch, plan)
+    tpn = max(plan.tp, 1)
+    kv_ok = cfg.num_kv_heads % tpn == 0
+    seq_shard = getattr(cfg, "kv_seq_shard", False) and tpn > 1
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = leaf.ndim
+        if name == "pos":
+            if seq_shard:
+                return P(*((None,) * (nd - 1) + (tp,)))
+            return P(*((None,) * nd))
+        if name in ("k", "v"):
+            if seq_shard:
+                b = (bspec, tp, None, None)     # sequence-sharded cache
+            else:
+                b = (bspec, None, tp if kv_ok else None, None)
+        elif name in ("ckv", "kpe"):
+            b = (bspec, None, None)
+        elif name == "ssm":
+            b = (bspec, tp, None, None)
+        elif name == "conv_x":
+            b = (bspec, None, tp)
+        elif name in ("conv_B", "conv_C"):
+            b = (bspec, None, None)
+        elif name == "wkv":
+            nh_ok = (cfg.rwkv is not None
+                     and (cfg.d_model // cfg.rwkv.head_dim) % tpn == 0)
+            b = (bspec, tp if nh_ok else None, None, None)
+        elif name.startswith("x_prev"):
+            b = (bspec, None, None)
+        else:
+            b = (bspec,) + (None,) * (nd - 1)
+        pad = nd - len(b)
+        return P(*((None,) * pad + tuple(b)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])

@@ -1,0 +1,5 @@
+from repro.train.step import build_train_step, train_step_fn
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+
+__all__ = ["build_train_step", "train_step_fn", "save_checkpoint",
+           "load_checkpoint"]

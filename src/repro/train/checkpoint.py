@@ -1,0 +1,60 @@
+"""Checkpointing: pytree <-> compressed npz with path-flattened keys.
+
+No orbax dependency (not installed offline). Arrays are gathered to host;
+for multi-device runs call on fully-addressable arrays (the CPU dry-run and
+single-process training used here always are).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"__step__": np.int64(step)}
+    payload.update({f"p/{k}": v for k, v in _flatten(params).items()})
+    if opt_state is not None:
+        payload.update({f"o/{k}": v for k, v in _flatten(opt_state).items()})
+    # atomic write (savez appends .npz only when missing, so force it)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".npz")
+    os.close(fd)
+    np.savez_compressed(tmp, **payload)
+    os.replace(tmp, path)
+
+
+def load_checkpoint(path: str, params_like, opt_like=None):
+    """Restore into the structure of ``params_like`` (names must match)."""
+    data = np.load(path, allow_pickle=False)
+    step = int(data["__step__"])
+
+    def restore(prefix, like):
+        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for pth, leaf in flat_like:
+            key = prefix + "/".join(
+                str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                for k in pth)
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            leaves.append(arr.astype(leaf.dtype))
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore("p/", params_like)
+    opt_state = restore("o/", opt_like) if opt_like is not None else None
+    return params, opt_state, step

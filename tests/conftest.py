@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — unit tests see ONE device;
+multi-device coverage runs via subprocess scripts in tests/distributed/."""
+import os
+import sys
+
+import jax
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

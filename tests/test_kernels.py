@@ -1,0 +1,107 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attention_pallas
+from repro.kernels.grouped_ffn import grouped_ffn_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+
+
+@pytest.mark.parametrize("G,T,d,f", [(1, 128, 64, 128), (4, 64, 128, 256),
+                                     (2, 200, 64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("glu", [True, False])
+def test_grouped_ffn_sweep(G, T, d, f, dtype, glu):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = (jax.random.normal(ks[0], (G, T, d)) * 0.5).astype(dtype)
+    w1 = (jax.random.normal(ks[1], (G, d, f)) * 0.05).astype(dtype)
+    w3 = (jax.random.normal(ks[2], (G, d, f)) * 0.05).astype(dtype) if glu else None
+    w2 = (jax.random.normal(ks[3], (G, f, d)) * 0.05).astype(dtype)
+    got = grouped_ffn_pallas(x, w1, w3, w2, act="silu", block_t=64,
+                             block_f=128, interpret=True)
+    want = ref.grouped_ffn_ref(x, w1, w3, w2, act="silu")
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,H,hd", [(1, 128, 2, 64), (2, 256, 4, 32),
+                                      (1, 512, 1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, T, H, hd, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, T, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, H, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, H, hd)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, block_q=64, block_k=64,
+                                 interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,T,nh,hd", [(1, 64, 1, 16), (2, 32, 2, 64),
+                                       (1, 128, 4, 32)])
+def test_rwkv6_scan_sweep(B, T, nh, hd):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    r = jax.random.normal(ks[0], (B, T, nh, hd)) * 0.3
+    k = jax.random.normal(ks[1], (B, T, nh, hd)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, nh, hd)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, nh, hd)))
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.1
+    s0 = jax.random.normal(ks[5], (B, nh, hd, hd)) * 0.1
+    y1, s1 = rwkv6_scan_pallas(r, k, v, w, u, s0, interpret=True)
+    y2, s2 = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_rwkv6_state_carry_composes():
+    """Scanning two halves with the carried state == one full scan."""
+    B, T, nh, hd = 1, 64, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r = jax.random.normal(ks[0], (B, T, nh, hd)) * 0.3
+    k = jax.random.normal(ks[1], (B, T, nh, hd)) * 0.3
+    v = jax.random.normal(ks[2], (B, T, nh, hd)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, nh, hd)))
+    u = jax.random.normal(ks[4], (nh, hd)) * 0.1
+    s0 = jnp.zeros((B, nh, hd, hd))
+    y_full, s_full = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    h = T // 2
+    y1, s_mid = rwkv6_scan_pallas(r[:, :h], k[:, :h], v[:, :h], w[:, :h],
+                                  u, s0, interpret=True)
+    y2, s_end = rwkv6_scan_pallas(r[:, h:], k[:, h:], v[:, h:], w[:, h:],
+                                  u, s_mid, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_end), np.asarray(s_full),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,nc,Q,nh,hd,ds", [(1, 2, 32, 2, 16, 8),
+                                             (2, 1, 64, 1, 32, 16)])
+def test_ssd_chunk_sweep(B, nc, Q, nh, hd, ds):
+    from repro.kernels.ssd_chunk import ssd_chunk_pallas
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    xh = jax.random.normal(ks[0], (B, nc, Q, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, nc, Q, nh)))
+    loga = -jax.nn.softplus(jax.random.normal(ks[2], (B, nc, Q, nh))) * 0.5
+    Bc = jax.random.normal(ks[3], (B, nc, Q, ds))
+    Cc = jax.random.normal(ks[4], (B, nc, Q, ds))
+    y1, sb1, ac1 = ssd_chunk_pallas(xh, dt, loga, Bc, Cc, interpret=True)
+    y2, sb2, ac2 = ref.ssd_chunk_ref(xh, dt, loga, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(sb1), np.asarray(sb2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ac1), np.asarray(ac2),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,29 @@
+"""End-to-end forward with Pallas kernels enabled (interpret mode on CPU):
+the kernel path must match the jnp path within bf16 tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.transformer import forward, init_model
+from repro.sharding.plan import single_device_plan
+
+PLAN = single_device_plan()
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "qwen3-moe-30b-a3b"])
+def test_forward_with_kernels_matches(arch):
+    cfg = get_reduced(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    B, S = 2, 64
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    pos = jnp.arange(S)
+    _, ref, _, _ = forward(params, toks, cfg, PLAN, positions=pos,
+                           use_kernel=False)
+    _, got, _, _ = forward(params, toks, cfg, PLAN, positions=pos,
+                           use_kernel=True)
+    a, b = np.asarray(ref, np.float32), np.asarray(got, np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 3e-2, rel
