@@ -1,0 +1,118 @@
+"""Dispatch-backend micro-benchmark (EXPERIMENTS.md §Perf-1).
+
+Times the full local dispatch -> combine round trip — position assignment,
+capacity-buffer build, gate-weighted combine; jitted, no collectives, no
+expert FFN — for the ``dense`` one-hot/cumsum backend vs the ``sort``
+backend of :mod:`repro.core.dispatch`, across (T, E, k, capacity_factor).
+
+The dense path is O(T*k*E) in memory and work before any useful byte moves;
+the sort path is O(T*k log(T*k)) + pure gathers, so the gap widens with E.
+Numbers here are CPU (interpret container); the structural win carries to
+TPU where the dense one-hot also stresses VMEM.
+
+Prints a CSV block and writes machine-readable ``BENCH_dispatch.json`` so
+the perf trajectory is trackable across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch as D
+from repro.core.moe import capacity
+
+D_MODEL = 128
+ITERS = 20
+WARMUP = 3
+# (tokens, groups, k, capacity_factor)
+SWEEP = [
+    (1024, 16, 1, 2.0),
+    (1024, 64, 2, 2.0),
+    (4096, 64, 1, 2.0),
+    (4096, 64, 2, 1.0),
+    (4096, 64, 2, 2.0),
+    (4096, 256, 2, 2.0),
+    (8192, 64, 2, 2.0),
+    (8192, 256, 1, 2.0),
+    (16384, 256, 2, 1.0),
+]
+
+
+def _roundtrip(backend: str, E: int, cap: int, k: int):
+    @jax.jit
+    def fn(x, gids, gates):
+        buf, state = D.dispatch(x, gids, gates, E, cap, k=k, backend=backend)
+        return D.combine(buf, state)
+    return fn
+
+
+def _time_interleaved(fns, args) -> dict:
+    """Best-of timing with the backends interleaved per iteration, so
+    machine-load drift on a shared box hits both equally."""
+    for fn in fns.values():                       # compile + cache warmup
+        for _ in range(WARMUP):
+            fn(*args).block_until_ready()
+    ts = {name: [] for name in fns}
+    for _ in range(ITERS):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            fn(*args).block_until_ready()
+            ts[name].append(time.perf_counter() - t0)
+    return {name: float(np.min(v)) * 1e3 for name, v in ts.items()}
+
+
+def run_sweep():
+    rng = np.random.default_rng(0)
+    results = []
+    for T, E, k, cf in SWEEP:
+        cap = capacity(T, k, cf, E)
+        A = T * k
+        x = jnp.asarray(rng.standard_normal((T, D_MODEL)), jnp.float32)
+        gids = jnp.asarray(rng.integers(0, E, A), jnp.int32)
+        gates = jnp.asarray(rng.uniform(0, 1, A), jnp.float32)
+        row = {"T": T, "E": E, "k": k, "capacity_factor": cf, "cap": cap}
+        fns = {b: _roundtrip(b, E, cap, k) for b in D.BACKENDS}
+        timed = _time_interleaved(fns, (x, gids, gates))
+        for backend, ms in timed.items():
+            row[f"{backend}_ms"] = ms
+        row["speedup"] = row["dense_ms"] / row["sort_ms"]
+        results.append(row)
+    return results
+
+
+def main() -> None:
+    results = run_sweep()
+    print("# dispatch->combine round trip, jitted, d_model="
+          f"{D_MODEL}, best of {ITERS} interleaved "
+          f"(backend={jax.default_backend()})")
+    print("T,E,k,cf,cap,dense_ms,sort_ms,speedup")
+    for r in results:
+        print(f"{r['T']},{r['E']},{r['k']},{r['capacity_factor']},"
+              f"{r['cap']},{r['dense_ms']:.3f},{r['sort_ms']:.3f},"
+              f"{r['speedup']:.2f}x")
+    big = [r for r in results if r["T"] >= 4096 and r["E"] >= 64]
+    worst = min(r["speedup"] for r in big)
+    print(f"# worst speedup at T>=4096, E>=64: {worst:.2f}x")
+    payload = {
+        "bench": "dispatch_backends",
+        "d_model": D_MODEL,
+        "iters": ITERS,
+        "jax_backend": jax.default_backend(),
+        "results": results,
+    }
+    # anchored to the repo root so the tracked artifact updates regardless
+    # of the cwd the harness runs from
+    out_path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_dispatch.json")
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

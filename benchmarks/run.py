@@ -24,10 +24,13 @@ def _timed(name, fn):
 
 
 def main() -> None:
-    from benchmarks import (bench_convergence, bench_model_sizes,
-                            bench_moe_layer, bench_pipeline_chunks,
-                            bench_scaling, bench_throughput)
+    from benchmarks import (bench_convergence, bench_dispatch,
+                            bench_model_sizes, bench_moe_layer,
+                            bench_pipeline_chunks, bench_scaling,
+                            bench_throughput)
     ok = True
+    # emits machine-readable BENCH_dispatch.json alongside the CSV
+    ok &= _timed("dispatch_backends", bench_dispatch.main)
     ok &= _timed("table1_throughput", bench_throughput.main)
     ok &= _timed("table2_model_sizes", bench_model_sizes.main)
     ok &= _timed("table3_moe_layer", bench_moe_layer.main)

@@ -34,6 +34,10 @@ class MoEConfig:
     # than the padded level-1 buffer (fixes capacity compounding; see
     # EXPERIMENTS.md §Perf-2). False reproduces the paper-faithful baseline.
     tight_level2_capacity: bool = False
+    # local dispatch/combine math (repro.core.dispatch): "sort" (argsort +
+    # fused gathers, the fast path; see EXPERIMENTS.md §Perf-1) or "dense"
+    # (one-hot/cumsum oracle).
+    dispatch_backend: str = "sort"
 
 
 @dataclass(frozen=True)

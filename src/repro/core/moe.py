@@ -22,19 +22,41 @@ production meshes.
 Capacity semantics follow the paper: per-group capacity
 ``C = ceil(k * T * capacity_factor / groups)``; overflow tokens are dropped
 (contribute zeros through the residual connection).
+
+**Dispatch-backend architecture.** The local dispatch/combine math — placing
+token assignments into per-group capacity buffers before each All2All and
+reading them back gate-weighted after — is delegated to the pluggable
+subsystem in :mod:`repro.core.dispatch`, selected by
+``MoEConfig.dispatch_backend``:
+
+* ``"sort"`` (default) — stable argsort by destination group +
+  sorted-segment position arithmetic; the buffer is built by *gathering*
+  rows straight from the token array (no k-fold token copy), optionally
+  through the fused Pallas gather/gather-reduce kernels in
+  :mod:`repro.kernels.moe_dispatch` (``use_kernel=True``).
+* ``"dense"`` — the O(tokens x groups) one-hot/cumsum oracle, kept for
+  verification and as the equivalence reference in tests.
+
+Both routing schedules run every dispatch hop (one for switch, two per
+direction for SMILE) through the same interface, so a backend improvement
+lands on all of them at once.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.common.config import MoEConfig
+from repro.core import dispatch as D
+# re-exported for backward compatibility (tests and downstream code import
+# the dispatch primitives from here)
+from repro.core.dispatch import (combine_gather, dispatch_scatter,
+                                 positions_in_group, scatter_flags)
 from repro.core.layout import ExpertLayout, make_layout
 from repro.sharding import comm
 from repro.sharding.plan import MeshPlan
@@ -44,8 +66,11 @@ from repro.sharding.plan import MeshPlan
 # Routing math (pure, per-device)
 # =============================================================================
 
-def router_probs(x: jax.Array, w: jax.Array) -> jax.Array:
-    """Eq. 1: softmax router probabilities, computed in fp32."""
+def router_probs(x: jax.Array, w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 1: softmax router probabilities, computed in fp32.
+
+    Returns ``(probs, logits)`` — both (t, E); logits feed the z-loss.
+    """
     logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
                         w.astype(jnp.float32))
     return jax.nn.softmax(logits, axis=-1), logits
@@ -61,55 +86,6 @@ def topk_gates(probs: jax.Array, k: int, renorm: bool) -> Tuple[jax.Array, jax.A
 
 def capacity(tokens: int, k: int, factor: float, groups: int) -> int:
     return max(1, math.ceil(tokens * k * factor / groups))
-
-
-def positions_in_group(group_ids: jax.Array, keep_in: jax.Array,
-                       num_groups: int, cap: int
-                       ) -> Tuple[jax.Array, jax.Array]:
-    """Assign each (flat) routing decision a slot within its group.
-
-    ``group_ids``: (A,) int32; ``keep_in``: (A,) bool validity. Returns
-    ``pos`` (A,) position within group and ``keep`` (A,) bool (valid and
-    under capacity). Overflow = dropped, in arrival order (paper semantics).
-    """
-    onehot = jax.nn.one_hot(group_ids, num_groups, dtype=jnp.int32)
-    onehot = onehot * keep_in[:, None].astype(jnp.int32)
-    pos = jnp.cumsum(onehot, axis=0) - onehot       # exclusive prefix count
-    pos = jnp.take_along_axis(pos, group_ids[:, None], axis=1)[:, 0]
-    keep = keep_in & (pos < cap)
-    return pos, keep
-
-
-def dispatch_scatter(x: jax.Array, group_ids: jax.Array, pos: jax.Array,
-                     keep: jax.Array, num_groups: int, cap: int) -> jax.Array:
-    """Scatter tokens (A, d) into a capacity buffer (num_groups, cap, d)."""
-    d = x.shape[-1]
-    buf = jnp.zeros((num_groups, cap, d), dtype=x.dtype)
-    safe_pos = jnp.where(keep, pos, cap)            # OOB -> dropped
-    return buf.at[group_ids, safe_pos].add(
-        x * keep[:, None].astype(x.dtype), mode="drop")
-
-
-def scatter_flags(vals: jax.Array, group_ids: jax.Array, pos: jax.Array,
-                  keep: jax.Array, num_groups: int, cap: int) -> jax.Array:
-    """Scatter per-assignment scalars into (num_groups, cap)."""
-    buf = jnp.zeros((num_groups, cap), dtype=vals.dtype)
-    safe_pos = jnp.where(keep, pos, cap)
-    return buf.at[group_ids, safe_pos].add(vals * keep.astype(vals.dtype),
-                                           mode="drop")
-
-
-def combine_gather(buf: jax.Array, group_ids: jax.Array, pos: jax.Array,
-                   keep: jax.Array, gates: jax.Array,
-                   out_tokens: int, k: int) -> jax.Array:
-    """Gather expert outputs back to token order and apply gates.
-
-    ``buf``: (groups, cap, d); ids/pos/keep/gates flat (t*k,). Returns (t, d).
-    """
-    d = buf.shape[-1]
-    got = buf.at[group_ids, pos].get(mode="fill", fill_value=0)   # (A, d)
-    got = got * (gates * keep.astype(gates.dtype))[:, None].astype(buf.dtype)
-    return got.reshape(out_tokens, k, d).sum(axis=1)
 
 
 # =============================================================================
@@ -281,11 +257,10 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
 
     V = layout.virtual_total
     cap = capacity(t, k, cfg.capacity_factor, V)
-    valid = jnp.ones((A,), dtype=bool)
-    pos, keep = positions_in_group(v, valid, V, cap)
-
-    xr = jnp.repeat(x, k, axis=0) if k > 1 else x
-    buf = dispatch_scatter(xr, v, pos, keep, V, cap)            # (V, cap, d)
+    buf, dstate = D.dispatch(x, v, gates.reshape(-1), V, cap, k=k,
+                             backend=cfg.dispatch_backend,
+                             use_kernel=use_kernel)              # (V, cap, d)
+    keep = dstate.keep
 
     # ---- single flat All2All over the combined grid ------------------------
     nm_mesh = plan.ep
@@ -315,7 +290,7 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
                         b_m * layout.h, cap, d)
     back = back.transpose(0, 2, 1, 3, 4, 5).reshape(V, cap, d)
 
-    y = combine_gather(back, v, pos, keep, gates.reshape(-1), t, k)
+    y = D.combine(back, dstate)
 
     # ---- losses -------------------------------------------------------------
     top1 = eidx[:, 0]
@@ -355,12 +330,11 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     n1 = nidx.reshape(-1)                                             # (A1,)
     A1 = n1.shape[0]
     cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
-    pos1, keep1 = positions_in_group(n1, jnp.ones((A1,), bool), n_g, cap1)
-
-    xr = jnp.repeat(x, top_g, axis=0) if top_g > 1 else x
-    buf1 = dispatch_scatter(xr, n1, pos1, keep1, n_g, cap1)           # (n_g,C1,d)
-    vflag = scatter_flags(jnp.ones((A1,), jnp.float32), n1, pos1, keep1,
-                          n_g, cap1)                                  # (n_g,C1)
+    buf1, st1 = D.dispatch(x, n1, p_gates.reshape(-1), n_g, cap1,
+                           k=top_g, backend=cfg.dispatch_backend,
+                           use_kernel=use_kernel)                     # (n_g,C1,d)
+    keep1 = st1.keep
+    vflag = D.dispatch_flags(jnp.ones((A1,), jnp.float32), st1)       # (n_g,C1)
 
     n_mesh = max(plan.n_inter, 1)
     b_n = n_g // n_mesh
@@ -404,10 +378,11 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     else:
         cap2 = capacity(n_mesh * cap1, k_local, cfg.capacity_factor,
                         layout.virtual_per_node)
-    pos2, keep2 = positions_in_group(v2, validA, V2, cap2)
-
-    x1r = jnp.repeat(x1, k_local, axis=0) if k_local > 1 else x1
-    buf2 = dispatch_scatter(x1r, v2, pos2, keep2, V2, cap2)   # (V2, C2, d)
+    buf2, st2 = D.dispatch(x1, v2, q_gates.reshape(-1), V2, cap2,
+                           k=k_local, valid=validA,
+                           backend=cfg.dispatch_backend,
+                           use_kernel=use_kernel)             # (V2, C2, d)
+    keep2 = st2.keep
 
     m_mesh = max(plan.n_intra, 1)
     b_mh = layout.virtual_per_node // m_mesh                  # groups per rank
@@ -432,14 +407,13 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     back2 = back2.reshape(m_mesh, b_n, b_mh, cap2, d).transpose(1, 0, 2, 3, 4)
     back2 = back2.reshape(V2, cap2, d)
     # apply intra gates where q is known (the intermediate hop)
-    y1 = combine_gather(back2, v2, pos2, keep2, q_gates.reshape(-1),
-                        t1, k_local)                           # (t1, d)
+    y1 = D.combine(back2, st2)                                 # (t1, d)
 
     # ---------------- reverse level 1 ----------------------------------------
     y1 = y1.reshape(b_n, n_mesh, cap1, d).transpose(1, 0, 2, 3)
     y1 = y1.reshape(n_g, cap1, d)
     back1 = _fold_a2a(y1, n_g, plan.ep_inter, n_mesh)          # (n_g, C1, d)
-    y = combine_gather(back1, n1, pos1, keep1, p_gates.reshape(-1), t, top_g)
+    y = D.combine(back1, st1)
 
     # ---------------- additive LB loss (Eq. 4) -------------------------------
     f_i, P_i = lb_loss_terms(p_probs, nidx[:, 0], jnp.ones((t,), bool),

@@ -68,7 +68,24 @@ def grouped_ffn_pallas(x: jax.Array, w1: jax.Array, w3, w2: jax.Array,
     if pad_t:
         x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
     Tp = x.shape[1]
-    grid = (G, Tp // bt, f // bf)
+    # f % bf != 0 used to silently truncate the tail columns (grid = f // bf).
+    # Prefer shrinking bf to the largest divisor of f (no data movement); only
+    # a pathological f with no lane-sized divisor falls back to zero-padding
+    # the weights (exact: act(0) == 0 for gelu/silu and padded w2 rows are 0,
+    # but it copies the expert weights every call).
+    pad_f = 0
+    if f % bf:
+        div = max(d_ for d_ in range(1, bf + 1) if f % d_ == 0)
+        if div >= min(128, f):
+            bf = div
+        else:
+            pad_f = (-f) % bf
+            w1 = jnp.pad(w1, ((0, 0), (0, 0), (0, pad_f)))
+            if w3 is not None:
+                w3 = jnp.pad(w3, ((0, 0), (0, 0), (0, pad_f)))
+            w2 = jnp.pad(w2, ((0, 0), (0, pad_f), (0, 0)))
+    fp = f + pad_f
+    grid = (G, Tp // bt, fp // bf)
 
     x_spec = pl.BlockSpec((1, bt, d), lambda g, t, j: (g, t, 0))
     w1_spec = pl.BlockSpec((1, d, bf), lambda g, t, j: (g, 0, j))

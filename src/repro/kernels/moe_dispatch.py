@@ -1,0 +1,105 @@
+"""Pallas TPU kernels: fused MoE dispatch gather / combine gather-reduce.
+
+These are the two data movements bracketing expert compute (the "routing"
+slice of the paper's Table 3 breakdown).  The sort backend in
+:mod:`repro.core.dispatch` reduces both to row gathers with data-dependent
+indices, which is exactly the shape scalar prefetch is built for: the index
+arrays are prefetched into SMEM, each grid step's ``BlockSpec`` index map
+reads one index, and the pipeline DMAs the selected (1, d) row HBM->VMEM
+while the previous row is being written.  No (A, V) one-hot, no scatter —
+every byte moved is a byte the buffer needs.
+
+* :func:`dispatch_gather_pallas` — fill the flat capacity buffer
+  ``(R = num_groups*cap, d)``: slot ``i`` copies token row ``src[i]`` from
+  ``x``, or zeros when ``src[i] < 0`` (empty slot).  The empty-slot zeroing
+  is fused into the same kernel (predicated write).
+
+* :func:`combine_gather_pallas` — token ``i`` accumulates its k assignments:
+  ``y[i] = sum_j scale[i, j] * rows[src[i, j]]`` with dropped assignments
+  (``src < 0``) contributing zero.  Gate weighting and the k-way reduction
+  are fused with the gather (grid ``(t, k)``, output revisited over j with
+  fp32 accumulation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _dispatch_kernel(src_ref, x_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(src_ref[i] >= 0)
+    def _copy():
+        o_ref[...] = x_ref[...]
+
+    @pl.when(src_ref[i] < 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+def dispatch_gather_pallas(x: jax.Array, src: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """x: (T, d); src: (R,) int32 source row ids (-1 = empty) -> (R, d)."""
+    T, d = x.shape
+    R = src.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(R,),
+        # index map sees the prefetched src ref: block i streams row src[i]
+        in_specs=[pl.BlockSpec((1, d), lambda i, src: (jnp.maximum(src[i], 0),
+                                                       0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, src: (i, 0)),
+    )
+    return pl.pallas_call(
+        _dispatch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(src, x)
+
+
+def _combine_kernel(src_ref, scale_ref, rows_ref, o_ref, acc_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+    w = jnp.where(src_ref[i, j] >= 0, scale_ref[i, j], 0.0)
+    contrib = rows_ref[...].astype(jnp.float32) * w.astype(jnp.float32)
+
+    # accumulate in the fp32 scratch tile; the output dtype is only touched
+    # once, on the last k step (j is innermost, so acc is consumed before
+    # the next token reuses it)
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = contrib
+
+    @pl.when(j != 0)
+    def _acc():
+        acc_ref[...] = acc_ref[...] + contrib
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def combine_gather_pallas(rows: jax.Array, src: jax.Array, scale: jax.Array,
+                          *, interpret: bool = False) -> jax.Array:
+    """rows: (R, d); src/scale: (t, k) -> (t, d) gate-weighted k-reduction."""
+    R, d = rows.shape
+    t, k = src.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(t, k),
+        in_specs=[pl.BlockSpec(
+            (1, d), lambda i, j, src, sc: (jnp.maximum(src[i, j], 0), 0))],
+        # j is innermost: token i's accumulator tile stays resident in VMEM
+        # across its k accumulation steps
+        out_specs=pl.BlockSpec((1, d), lambda i, j, src, sc: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _combine_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((t, d), rows.dtype),
+        interpret=interpret,
+    )(src, scale, rows)

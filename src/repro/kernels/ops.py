@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention_pallas
 from repro.kernels.grouped_ffn import grouped_ffn_pallas
+from repro.kernels.moe_dispatch import (combine_gather_pallas,
+                                        dispatch_gather_pallas)
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
@@ -33,6 +35,30 @@ def grouped_ffn(x, w1, w3, w2, *, act: str = "gelu"):
                               None if w3 is None else w3.astype(x.dtype),
                               w2.astype(x.dtype), act=act,
                               interpret=_interpret())
+
+
+def dispatch_gather(x, src):
+    """MoE dispatch: gather token rows into the flat capacity buffer.
+    Falls back to the jnp oracle for tiny shapes (interpret-mode / grid
+    overhead dominates below a few VPU rows)."""
+    T, d = x.shape
+    R = src.shape[0]
+    if R < 16 or d % 8:
+        return ref.dispatch_gather_ref(x, src)
+    return dispatch_gather_pallas(x, src.astype(jnp.int32),
+                                  interpret=_interpret())
+
+
+def combine_gather(rows, src, scale):
+    """MoE combine: gate-weighted gather-reduce of expert outputs back to
+    token order. rows: (R, d); src/scale: (t, k)."""
+    t, k = src.shape
+    d = rows.shape[-1]
+    if t < 16 or d % 8:
+        return ref.combine_gather_ref(rows, src, scale)
+    return combine_gather_pallas(rows, src.astype(jnp.int32),
+                                 scale.astype(jnp.float32),
+                                 interpret=_interpret())
 
 
 def flash_attention(q, k, v):

@@ -21,6 +21,23 @@ def grouped_ffn_ref(x, w1, w3, w2, *, act: str = "gelu"):
     return y.astype(x.dtype)
 
 
+def dispatch_gather_ref(x, src):
+    """MoE dispatch gather. x: (T, d); src: (R,) int32 source row per
+    buffer slot, -1 = empty slot -> zeros. Returns (R, d)."""
+    rows = jnp.take(x, jnp.maximum(src, 0), axis=0)
+    return rows * (src >= 0)[:, None].astype(x.dtype)
+
+
+def combine_gather_ref(rows, src, scale):
+    """MoE combine gather-reduce. rows: (R, d) flat capacity buffer;
+    src/scale: (t, k) buffer row per assignment (-1 = dropped) and gate
+    weight. Returns (t, d) = sum_k scale * rows[src]."""
+    t, k = src.shape
+    got = jnp.take(rows, jnp.maximum(src, 0).reshape(-1), axis=0)  # (t*k, d)
+    w = jnp.where(src >= 0, scale, 0).reshape(-1, 1).astype(rows.dtype)
+    return (got * w).reshape(t, k, -1).sum(axis=1)
+
+
 def flash_attention_ref(q, k, v):
     """Causal softmax attention. q/k/v: (B, T, H, hd)."""
     B, T, H, hd = q.shape

@@ -101,7 +101,14 @@ def _parse_operands(rest: str) -> List[str]:
     m = re.search(r"\(([^)]*)\)", rest)
     if not m:
         return []
-    return [x.strip() for x in m.group(1).split(",") if x.strip().startswith("%")]
+    # operands print either bare ("%x") or with an inline type
+    # ("f32[32,32]{1,0} %x", older XLA text) — take the %name token
+    out = []
+    for piece in m.group(1).split(","):
+        toks = re.findall(r"%[\w.\-]+", piece)
+        if toks:
+            out.append(toks[-1])
+    return out
 
 
 def analyze_computation(comp: Computation, symtab_shapes: Dict[str, str],

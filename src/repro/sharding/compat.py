@@ -1,0 +1,34 @@
+"""JAX version compatibility shims for mesh/shard_map construction.
+
+The repo targets current JAX (``jax.make_mesh(..., axis_types=...)``,
+``jax.shard_map(..., check_vma=...)``); this container pins jax 0.4.37
+where those spellings don't exist yet (``axis_types`` keyword,
+``jax.sharding.AxisType``, top-level ``jax.shard_map`` and its
+``check_vma`` kwarg all landed later — 0.4.37 has
+``jax.experimental.shard_map.shard_map(check_rep=...)``).  Route every
+mesh/shard_map construction through here so the rest of the code is
+version-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """Top-level ``jax.shard_map`` when available, else the experimental
+    one; ``check`` maps onto check_vma / check_rep respectively."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)

@@ -26,6 +26,7 @@ from repro.optim.optimizers import Optimizer, clip_by_global_norm
 from repro.optim.zero1 import (Zero1State, init_state_shapes, state_specs,
                                zero1_lamb_step)
 from repro.sharding import comm
+from repro.sharding.compat import shard_map
 from repro.sharding.plan import MeshPlan
 from repro.sharding.specs import (batch_specs, param_specs, shard_axes,
                                   sharded_axes_only)
@@ -175,10 +176,9 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
     bspec = batch_specs(batch_like, plan)
     mspec = {k: P() for k in ("ce", "lb", "z", "mtp", "drop_frac", "loss",
                               "grad_norm", "lr")}
-    sm = jax.shard_map(fn, mesh=mesh,
-                       in_specs=(pspec, ospec, bspec, P()),
-                       out_specs=(pspec, ospec, mspec),
-                       check_vma=False)
+    sm = shard_map(fn, mesh=mesh,
+                   in_specs=(pspec, ospec, bspec, P()),
+                   out_specs=(pspec, ospec, mspec))
     return jax.jit(sm, donate_argnums=(0, 1)), pspec
 
 

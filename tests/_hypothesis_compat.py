@@ -1,0 +1,55 @@
+"""Fallback for the ``hypothesis`` dependency (absent in this container).
+
+When hypothesis is installed, re-exports the real ``given``/``settings``/
+``st``.  Otherwise provides minimal stand-ins that replay a fixed number of
+deterministic pseudo-random examples, so the property tests still execute
+(with reduced rigor) instead of breaking collection of the whole module.
+
+Only the strategy constructors the test suite actually uses are implemented
+(``st.integers``, ``st.floats``); extend as needed.
+"""
+try:
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # offline container
+    HAVE_HYPOTHESIS = False
+    import numpy as _np
+
+    _FALLBACK_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        return lambda fn: fn
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = _np.random.default_rng(0)
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+            # NOT functools.wraps: the wrapper must hide the original
+            # signature, or pytest would look for fixtures named after the
+            # strategy-drawn parameters
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco

@@ -17,10 +17,10 @@ from repro.configs import get_reduced
 from repro.data.pipeline import synthetic_tokens
 from repro.models.transformer import init_caches, init_model
 from repro.serve.decode import build_decode_step, build_prefill
+from repro.sharding.compat import make_mesh, shard_map
 from repro.sharding.plan import single_device_plan, test_plan
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 plan = test_plan(n_inter=2, n_intra=2)
 oracle = single_device_plan()
 B, PROMPT, NEW = 4, 16, 6
@@ -69,10 +69,9 @@ for noisy in ["zamba2-2.7b", "deepseek-v3-671b"]:
         _, lg, _, _ = forward(p, t, cfg, plan, positions=jnp.arange(PROMPT))
         return lg
 
-    fsm = jax.jit(jax.shard_map(f, mesh=mesh,
-                                in_specs=(pspec, P("data", None)),
-                                out_specs=P("data", None, "model"),
-                                check_vma=False))
+    fsm = jax.jit(shard_map(f, mesh=mesh,
+                            in_specs=(pspec, P("data", None)),
+                            out_specs=P("data", None, "model")))
     dist_lg = fsm(params, toks)
     a, b = np.asarray(ref_lg, np.float32), np.asarray(dist_lg, np.float32)
     rel = np.abs(a - b).max() / np.abs(a).max()

@@ -17,10 +17,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.common.config import MoEConfig
 from repro.core.moe import init_moe_params, moe_layer
+from repro.sharding.compat import make_mesh, shard_map
 from repro.sharding.plan import single_device_plan, test_plan
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 plan = test_plan(n_inter=4, n_intra=2)
 oracle = single_device_plan()
 d = 32
@@ -53,9 +53,9 @@ for router in ["switch", "smile"]:
             y, st = moe_layer(params, x, cfg, plan, act="gelu")
             return y, st.lb_loss
 
-        fsm = jax.jit(jax.shard_map(
+        fsm = jax.jit(shard_map(
             f, mesh=mesh, in_specs=(pspecs, P(("data", "model"), None)),
-            out_specs=(P(("data", "model"), None), P()), check_vma=False))
+            out_specs=(P(("data", "model"), None), P())))
         y_dist, lb_dist = fsm(params, x)
         np.testing.assert_allclose(np.asarray(y_dist), np.asarray(y_ref),
                                    rtol=2e-4, atol=2e-5)

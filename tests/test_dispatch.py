@@ -1,0 +1,189 @@
+"""Dispatch subsystem: the sort backend must match the dense oracle.
+
+Covers the primitive level (positions / keep masks / buffers / flags, bit
+for bit, including overflow-drop arrival ordering), the fused Pallas
+kernels vs their jnp oracles, and full switch/smile layers (both SMILE
+levels) run end-to-end under each backend.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.common.config import MoEConfig
+from repro.core import dispatch as D
+from repro.core import moe as M
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.moe_dispatch import (combine_gather_pallas,
+                                        dispatch_gather_pallas)
+from repro.sharding.plan import single_device_plan
+
+PLAN = single_device_plan()
+
+
+def _random_case(rng, t, k, groups, cap, d, invalid_frac=0.0):
+    A = t * k
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    gids = jnp.asarray(rng.integers(0, groups, A), jnp.int32)
+    gates = jnp.asarray(rng.uniform(0.0, 1.0, A), jnp.float32)
+    valid = jnp.asarray(rng.uniform(size=A) >= invalid_frac)
+    return x, gids, gates, valid
+
+
+# ------------------------------------------------------- property equivalence
+@settings(deadline=None, max_examples=25)
+@given(t=st.integers(4, 64), k=st.integers(1, 3), groups=st.integers(1, 8),
+       cap=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_sort_equals_dense_property(t, k, groups, cap, seed):
+    """keep masks and kept positions bit-for-bit; buffers bit-for-bit;
+    combined outputs allclose — including capacity overflow and invalid
+    assignments."""
+    rng = np.random.default_rng(seed)
+    x, gids, gates, valid = _random_case(rng, t, k, groups, cap, d=8,
+                                         invalid_frac=0.25)
+    buf_d, st_d = D.dispatch(x, gids, gates, groups, cap, k=k, valid=valid,
+                             backend="dense")
+    buf_s, st_s = D.dispatch(x, gids, gates, groups, cap, k=k, valid=valid,
+                             backend="sort")
+    np.testing.assert_array_equal(np.asarray(st_d.keep), np.asarray(st_s.keep))
+    kept = np.asarray(st_d.keep)
+    np.testing.assert_array_equal(np.asarray(st_d.pos)[kept],
+                                  np.asarray(st_s.pos)[kept])
+    np.testing.assert_array_equal(np.asarray(buf_d), np.asarray(buf_s))
+    y_d = D.combine(buf_d, st_d)
+    y_s = D.combine(buf_s, st_s)
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_s),
+                               rtol=1e-6, atol=1e-6)
+    vals = jnp.asarray(rng.uniform(1.0, 2.0, t * k), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(D.dispatch_flags(vals, st_d)),
+                                  np.asarray(D.dispatch_flags(vals, st_s)))
+
+
+def test_overflow_drops_in_arrival_order():
+    """Paper semantics: within a group the first `cap` assignments survive,
+    later arrivals are dropped — on both backends."""
+    t, k, groups, cap, d = 12, 1, 2, 3, 4
+    x = jnp.arange(t * d, dtype=jnp.float32).reshape(t, d)
+    gids = jnp.asarray([0, 0, 1, 0, 0, 1, 0, 1, 1, 1, 0, 1], jnp.int32)
+    gates = jnp.ones((t,), jnp.float32)
+    for backend in D.BACKENDS:
+        buf, state = D.dispatch(x, gids, gates, groups, cap, k=1,
+                                backend=backend)
+        keep = np.asarray(state.keep)
+        for g in range(groups):
+            idx = np.where(np.asarray(gids) == g)[0]
+            assert keep[idx[:cap]].all(), backend
+            assert not keep[idx[cap:]].any(), backend
+        # surviving slots hold the first `cap` arrivals of each group, in order
+        np.testing.assert_array_equal(np.asarray(buf)[0, :, 0],
+                                      np.asarray(x)[[0, 1, 3], 0])
+        np.testing.assert_array_equal(np.asarray(buf)[1, :, 0],
+                                      np.asarray(x)[[2, 5, 7], 0])
+        # dropped tokens contribute zero rows on combine
+        y = D.combine(buf, state)
+        dropped = ~keep
+        assert (np.asarray(y)[dropped] == 0).all(), backend
+
+
+def test_sort_backend_no_dense_onehot():
+    """The sort path never materializes an (A, num_groups) intermediate."""
+    t, groups, cap = 32, 8, 8
+    gids = jnp.asarray(np.random.default_rng(0).integers(0, groups, t))
+    jaxpr = jax.make_jaxpr(
+        lambda g: D.sort_positions(g, jnp.ones((t,), bool), groups, cap))(gids)
+    for eqn in jaxpr.jaxpr.eqns:
+        for v in eqn.outvars:
+            assert getattr(v.aval, "shape", ()) != (t, groups)
+
+
+# --------------------------------------------------------------- the kernels
+@pytest.mark.parametrize("T,d,R", [(32, 128, 64), (40, 64, 48), (8, 256, 96)])
+def test_dispatch_gather_kernel_matches_ref(T, d, R):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((T, d)), jnp.float32)
+    src = jnp.asarray(rng.integers(-1, T, R), jnp.int32)
+    got = dispatch_gather_pallas(x, src, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.dispatch_gather_ref(x, src)))
+
+
+@pytest.mark.parametrize("t,k,d,R", [(16, 1, 128, 64), (24, 3, 64, 48)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_combine_gather_kernel_matches_ref(t, k, d, R, dtype):
+    rng = np.random.default_rng(2)
+    rows = jnp.asarray(rng.standard_normal((R, d)), jnp.float32).astype(dtype)
+    src = jnp.asarray(rng.integers(-1, R, (t, k)), jnp.int32)
+    scale = jnp.asarray(rng.uniform(0, 1, (t, k)), jnp.float32)
+    got = combine_gather_pallas(rows, src, scale, interpret=True)
+    want = ref.combine_gather_ref(rows, src, scale)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_ops_wrappers_tiny_shape_fallback():
+    """ops.* must route tiny/misaligned shapes to the oracle, not Pallas."""
+    x = jnp.ones((4, 7), jnp.float32)            # d % 8 != 0
+    src = jnp.asarray([0, -1, 2, 3], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(kops.dispatch_gather(x, src)),
+                                  np.asarray(ref.dispatch_gather_ref(x, src)))
+    rows = jnp.ones((4, 7), jnp.float32)
+    src2 = jnp.asarray([[0], [-1], [2], [3]], jnp.int32)
+    sc = jnp.full((4, 1), 0.5, jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(kops.combine_gather(rows, src2, sc)),
+        np.asarray(ref.combine_gather_ref(rows, src2, sc)))
+
+
+# ------------------------------------------------------- full-layer coverage
+@pytest.mark.parametrize("router", ["switch", "smile"])
+@pytest.mark.parametrize("grid,E,k,g,cf", [
+    ((4, 4), 16, 1, 1, 8.0),     # ample capacity, top-1 (the paper)
+    ((4, 4), 8, 2, 1, 8.0),      # replication r=2
+    ((4, 4), 32, 8, 4, 8.0),     # h=2, bi-level top-(4x2): both levels busy
+    ((4, 4), 16, 2, 2, 0.5),     # overflow: drops on BOTH smile levels
+])
+def test_layer_backend_equivalence(router, grid, E, k, g, cf, rng_key):
+    cfg = MoEConfig(num_experts=E, top_k=k, top_g=g, d_ff_expert=64,
+                    capacity_factor=cf, router=router, grid=grid,
+                    renorm_gates=(k > 1), dispatch_backend="dense")
+    params = M.init_moe_params(rng_key, cfg, 32, PLAN, glu=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (96, 32))
+    y_d, s_d = M.moe_layer(params, x, cfg, PLAN, act="silu")
+    cfg_s = dataclasses.replace(cfg, dispatch_backend="sort")
+    y_s, s_s = M.moe_layer(params, x, cfg_s, PLAN, act="silu")
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_s),
+                               rtol=1e-5, atol=1e-6)
+    assert float(s_d.drop_frac) == pytest.approx(float(s_s.drop_frac),
+                                                 abs=1e-9)
+    assert float(s_d.lb_loss) == pytest.approx(float(s_s.lb_loss), rel=1e-6)
+    if cf < 1.0:
+        assert float(s_s.drop_frac) > 0.0       # overflow actually exercised
+
+
+@pytest.mark.parametrize("router", ["switch", "smile"])
+def test_layer_sort_kernel_path(router, rng_key):
+    """sort backend through the fused Pallas kernels (interpret on CPU)."""
+    cfg = MoEConfig(num_experts=16, top_k=2, top_g=2, d_ff_expert=64,
+                    capacity_factor=2.0, router=router, grid=(4, 4),
+                    renorm_gates=True, dispatch_backend="sort")
+    params = M.init_moe_params(rng_key, cfg, 32, PLAN, glu=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+    y_ref, _ = M.moe_layer(params, x, cfg, PLAN, act="silu", use_kernel=False)
+    y_ker, _ = M.moe_layer(params, x, cfg, PLAN, act="silu", use_kernel=True)
+    a = np.asarray(y_ref, np.float32)
+    b = np.asarray(y_ker, np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 3e-2, rel
+
+
+def test_unknown_backend_raises():
+    x = jnp.ones((4, 8))
+    gids = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="unknown dispatch backend"):
+        D.dispatch(x, gids, jnp.ones((4,)), 2, 2, backend="magic")

@@ -30,6 +30,23 @@ def test_grouped_ffn_sweep(G, T, d, f, dtype, glu):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("f,block_f", [(768, 512), (192, 128), (96, 512)])
+def test_grouped_ffn_f_not_multiple_of_block(f, block_f):
+    """Regression: f % block_f != 0 used to silently truncate the f axis
+    (grid = f // bf dropped the tail columns entirely)."""
+    G, T, d = 2, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    x = jax.random.normal(ks[0], (G, T, d)) * 0.5
+    w1 = jax.random.normal(ks[1], (G, d, f)) * 0.05
+    w3 = jax.random.normal(ks[2], (G, d, f)) * 0.05
+    w2 = jax.random.normal(ks[3], (G, f, d)) * 0.05
+    got = grouped_ffn_pallas(x, w1, w3, w2, act="gelu", block_t=64,
+                             block_f=block_f, interpret=True)
+    want = ref.grouped_ffn_ref(x, w1, w3, w2, act="gelu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 @pytest.mark.parametrize("B,T,H,hd", [(1, 128, 2, 64), (2, 256, 4, 32),
                                       (1, 512, 1, 128)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,15 +1,14 @@
 """MoE core invariants: routing, capacity, dispatch/combine, LB losses.
 
-Includes hypothesis property tests on the dispatch machinery and the paper's
-Eq. 4 minimum (loss_lb -> alpha + beta at uniform routing).
+Includes property tests on the dispatch machinery (hypothesis when
+available, deterministic replay otherwise — see _hypothesis_compat) and the
+paper's Eq. 4 minimum (loss_lb -> alpha + beta at uniform routing).
 """
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.common.config import MoEConfig
 from repro.core import moe as M
