@@ -51,14 +51,16 @@ def _roundtrip(backend: str, E: int, cap: int, k: int):
     return fn
 
 
-def _time_interleaved(fns, args) -> dict:
-    """Best-of timing with the backends interleaved per iteration, so
-    machine-load drift on a shared box hits both equally."""
+def _time_interleaved(fns, args, iters: int = ITERS,
+                      warmup: int = WARMUP) -> dict:
+    """Best-of timing with the variants interleaved per iteration, so
+    machine-load drift on a shared box hits all of them equally.  Shared by
+    bench_dropless."""
     for fn in fns.values():                       # compile + cache warmup
-        for _ in range(WARMUP):
+        for _ in range(warmup):
             fn(*args).block_until_ready()
     ts = {name: [] for name in fns}
-    for _ in range(ITERS):
+    for _ in range(iters):
         for name, fn in fns.items():
             t0 = time.perf_counter()
             fn(*args).block_until_ready()
@@ -76,13 +78,28 @@ def run_sweep():
         gids = jnp.asarray(rng.integers(0, E, A), jnp.int32)
         gates = jnp.asarray(rng.uniform(0, 1, A), jnp.float32)
         row = {"T": T, "E": E, "k": k, "capacity_factor": cf, "cap": cap}
-        fns = {b: _roundtrip(b, E, cap, k) for b in D.BACKENDS}
+        fns = {b: _roundtrip(b, E, cap, k) for b in D.CAPACITY_BACKENDS}
         timed = _time_interleaved(fns, (x, gids, gates))
         for backend, ms in timed.items():
             row[f"{backend}_ms"] = ms
         row["speedup"] = row["dense_ms"] / row["sort_ms"]
         results.append(row)
     return results
+
+
+def run_sweep_smoke():
+    """CI smoke: one tiny shape, both capacity backends, two timed iters —
+    exercises the jitted round trips without recording numbers."""
+    rng = np.random.default_rng(0)
+    T, E, k, cf = 1024, 8, 2, 2.0
+    cap = capacity(T, k, cf, E)
+    x = jnp.asarray(rng.standard_normal((T, D_MODEL)), jnp.float32)
+    gids = jnp.asarray(rng.integers(0, E, T * k), jnp.int32)
+    gates = jnp.asarray(rng.uniform(0, 1, T * k), jnp.float32)
+    fns = {b: _roundtrip(b, E, cap, k) for b in D.CAPACITY_BACKENDS}
+    for name, fn in fns.items():
+        fn(x, gids, gates).block_until_ready()
+        print(f"smoke {name}: ok")
 
 
 def main() -> None:

@@ -3,6 +3,10 @@
 Prints ``name,value,derived`` CSV blocks per benchmark. The dry-run-based
 roofline requires ``experiments/dryrun`` to be populated (see
 ``python -m repro.launch.dryrun --all``); it is skipped gracefully otherwise.
+
+``--smoke`` runs a minutes-not-hours subset (tiny dispatch + dropless
+sweeps) that exercises every dispatch backend's jitted round trip without
+recording numbers — the executable half of the CI recipe (see ci.sh).
 """
 from __future__ import annotations
 
@@ -23,14 +27,29 @@ def _timed(name, fn):
     return status == "ok"
 
 
+def smoke() -> None:
+    """Tiny sweeps of the two dispatch benches: compiles and runs every
+    backend round trip, asserts nothing hangs, writes NO json artifacts."""
+    from benchmarks import bench_dispatch, bench_dropless
+    ok = True
+    ok &= _timed("smoke_dispatch", lambda: bench_dispatch.run_sweep_smoke())
+    ok &= _timed("smoke_dropless", lambda: bench_dropless.run_sweep(
+        sweep=[(2048, 16, 2)], cfs=(1.25,), iters=2))
+    sys.exit(0 if ok else 1)
+
+
 def main() -> None:
-    from benchmarks import (bench_convergence, bench_dispatch,
+    if "--smoke" in sys.argv:
+        smoke()
+        return
+    from benchmarks import (bench_convergence, bench_dispatch, bench_dropless,
                             bench_model_sizes, bench_moe_layer,
                             bench_pipeline_chunks, bench_scaling,
                             bench_throughput)
     ok = True
-    # emits machine-readable BENCH_dispatch.json alongside the CSV
+    # emit machine-readable BENCH_*.json alongside the CSVs
     ok &= _timed("dispatch_backends", bench_dispatch.main)
+    ok &= _timed("dropless_vs_capacity", bench_dropless.main)
     ok &= _timed("table1_throughput", bench_throughput.main)
     ok &= _timed("table2_model_sizes", bench_model_sizes.main)
     ok &= _timed("table3_moe_layer", bench_moe_layer.main)

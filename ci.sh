@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Executable verify recipe (ROADMAP "Tier-1 verify" + benchmark smoke).
+#
+#   ./ci.sh          tier-1 test suite, then the benchmark smoke subset
+#   ./ci.sh --fast   tier-1 test suite only
+#
+# The tier-1 suite is the driver-enforced gate; the smoke step additionally
+# compiles and runs one jitted round trip of every dispatch backend
+# (dense / sort / dropless) so a backend that only breaks under jit is
+# caught here rather than in a 20-minute bench run.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+if [[ "${1:-}" != "--fast" ]]; then
+    echo "== benchmark smoke =="
+    python -m benchmarks.run --smoke
+fi
+
+echo "CI OK"

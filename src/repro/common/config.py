@@ -35,8 +35,11 @@ class MoEConfig:
     # EXPERIMENTS.md §Perf-2). False reproduces the paper-faithful baseline.
     tight_level2_capacity: bool = False
     # local dispatch/combine math (repro.core.dispatch): "sort" (argsort +
-    # fused gathers, the fast path; see EXPERIMENTS.md §Perf-1) or "dense"
-    # (one-hot/cumsum oracle).
+    # fused gathers, the fast path; see EXPERIMENTS.md §Perf-1), "dense"
+    # (one-hot/cumsum oracle), or "dropless" (capacity-free expert compute
+    # over tile-aligned ragged segments — zero padding into the FFN and zero
+    # token drops wherever the expert grid is local; capacity buffers remain
+    # only on fixed-shape All2All hops.  See EXPERIMENTS.md §Perf-3).
     dispatch_backend: str = "sort"
 
 

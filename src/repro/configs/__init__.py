@@ -53,6 +53,21 @@ def get_reduced(name: str) -> ModelConfig:
     return m.REDUCED
 
 
+def with_dispatch_backend(cfg: ModelConfig, backend: str) -> ModelConfig:
+    """Rebuild ``cfg`` with the MoE dispatch backend swapped ("sort",
+    "dense", or "dropless"); no-op for dense architectures."""
+    import dataclasses
+
+    from repro.core.dispatch import BACKENDS
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown dispatch backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
+    if cfg.moe is None:
+        return cfg
+    return cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                               dispatch_backend=backend))
+
+
 def config_for_shape(name: str, shape: InputShape) -> ModelConfig:
     """Adapt a config to an input shape.
 

@@ -3,7 +3,7 @@
 Every routing schedule in :mod:`repro.core.moe` reduces to the same local
 primitive: place ``A = t*k`` routing assignments into a per-group capacity
 buffer ``(num_groups, cap, d)`` (dispatch), run expert compute, and read the
-buffer back to token order with gate weighting (combine).  Two backends
+buffer back to token order with gate weighting (combine).  Three backends
 implement that primitive behind one interface:
 
 * ``"dense"`` — the original math, kept as the oracle: a dense
@@ -21,9 +21,10 @@ implement that primitive behind one interface:
   ``use_kernel=True`` both gathers run through the fused Pallas kernels in
   :mod:`repro.kernels.moe_dispatch`.
 
-Both backends produce bit-identical buffers and keep masks; within-group
-positions agree on every *valid* assignment (the position of an assignment
-with ``valid=False`` is unspecified — it never lands in the buffer).
+Both capacity backends produce bit-identical buffers and keep masks;
+within-group positions agree on every *valid* assignment (the position of an
+assignment with ``valid=False`` is unspecified — it never lands in the
+buffer).
 
 The interface::
 
@@ -33,6 +34,20 @@ The interface::
 
 ``dispatch_flags`` scatters per-assignment scalars (e.g. validity flags for
 SMILE level 1) into a ``(num_groups, cap)`` buffer using the same state.
+
+* ``"dropless"`` — no capacity buffer at all: :func:`dispatch_ragged` sorts
+  assignments by destination group into a flat *tile-aligned ragged* layout —
+  each group's segment starts at a multiple of ``block`` and holds exactly its
+  own assignments (MegaBlocks-style), so expert FFN runs over true per-group
+  segment lengths with zero capacity padding and **zero token drops**.  The
+  total padding is bounded by ``num_groups * (block - 1)`` rows regardless of
+  routing skew, vs the unbounded ``(cf - 1) * A`` padding (plus overflow
+  drops) of capacity buffers.  Because the layout is data-independent in
+  *shape* (only the segment boundaries move), it stays jittable; the ragged
+  grouped-matmul kernel (:mod:`repro.kernels.grouped_ffn`) scalar-prefetches
+  the per-tile group ids derived from ``group_starts``.  Capacity buffers
+  remain the right tool where a fixed-shape All2All payload is required
+  (the inter-node hop); see :mod:`repro.core.moe` for how the two compose.
 """
 from __future__ import annotations
 
@@ -44,7 +59,16 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-BACKENDS = ("dense", "sort")
+BACKENDS = ("dense", "sort", "dropless")
+# the two that place tokens into fixed (num_groups, cap, d) buffers and can
+# therefore drop overflow; "dropless" routes through dispatch_ragged instead
+CAPACITY_BACKENDS = ("dense", "sort")
+
+# row-tile bounds for the tile-aligned ragged layout; the default adapts to
+# the mean segment length and the compute path, see _ragged_block()
+RAGGED_BLOCK_MIN = 8
+RAGGED_BLOCK_MAX_KERNEL = 128      # one MXU tile; keeps the VMEM working set
+RAGGED_BLOCK_MAX_JNP = 4096        # XLA batched matmul reaches dense parity
 
 
 # =============================================================================
@@ -116,6 +140,11 @@ def sort_positions(group_ids: jax.Array, valid: jax.Array,
     ``slot_assign`` turns the dispatch scatter into a gather.
     """
     A = group_ids.shape[0]
+    if A == 0:
+        # serving can hand us an empty local batch; the packed-sort fast path
+        # below would divide/modulo by A == 0
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool),
+                jnp.full((num_groups * cap,), -1, jnp.int32))
     gi = group_ids.astype(jnp.int32)
     # invalid assignments sort after every real group -> never take a slot
     keys = jnp.where(valid, gi, num_groups)
@@ -145,6 +174,110 @@ def sort_positions(group_ids: jax.Array, valid: jax.Array,
 
 
 # =============================================================================
+# Dropless (tile-aligned ragged) backend primitives
+# =============================================================================
+
+def _ragged_block(A: int, num_groups: int, block: Optional[int],
+                  use_kernel: bool = False) -> int:
+    """Pick the row-tile size for the ragged layout.
+
+    Up to ``block`` rows of alignment slack are paid per group, so aim for
+    ~8+ tiles per average segment (<= ~6% waste at uniform routing): tile
+    ``~ mean/8``, power of two.  The cap depends on the compute path: the
+    Pallas kernel wants one MXU tile (bigger blows the VMEM working set at
+    large d), while the jnp fallback wants tiles as large as the slack
+    budget allows — XLA's batched matmul only reaches the dense grouped
+    einsum's per-row throughput at a few thousand rows per batch entry.
+    Static in A/num_groups, so jit-safe.
+    """
+    if block is not None:
+        return block
+    cap = RAGGED_BLOCK_MAX_KERNEL if use_kernel else RAGGED_BLOCK_MAX_JNP
+    mean = max(A // max(num_groups, 1), 1)
+    target = mean if mean < 64 else max(mean // 8, 64)
+    b = RAGGED_BLOCK_MIN
+    while b * 2 <= min(target, cap):
+        b *= 2
+    return b
+
+
+def ragged_rows(A: int, num_groups: int, block: int) -> int:
+    """Static row count of the ragged layout: worst-case tile-aligned size.
+
+    Each group wastes at most one partial tile, so
+    ``ceil(A/block) + num_groups`` tiles always suffice.
+    """
+    return ((A + block - 1) // block + num_groups) * block
+
+
+def ragged_positions(group_ids: jax.Array, valid: jax.Array,
+                     num_groups: int, block: int
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Tile-aligned ragged layout: the capacity-free sibling of
+    :func:`sort_positions`.
+
+    Assignments are stable-sorted by destination group; group ``g``'s segment
+    is placed starting at ``group_starts[g]`` — always a multiple of
+    ``block`` — and holds exactly its own valid assignments, in arrival
+    order.  Nothing is ever dropped.
+
+    Returns ``(rank, group_starts, row_src)``:
+
+    * ``rank`` (A,) int32 — row of each assignment in the flat layout
+      (``-1`` for invalid assignments);
+    * ``group_starts`` (num_groups+1,) int32 — aligned segment starts;
+      ``group_starts[g+1] - group_starts[g]`` is group g's *aligned* extent,
+      and rows ``[group_starts[g], group_starts[g] + len_g)`` are its real
+      assignments (the remainder of the last tile is padding);
+    * ``row_src`` (R,) int32 — assignment id occupying each row, ``-1`` for
+      alignment padding / unused tail (R = :func:`ragged_rows`, static).
+    """
+    A = group_ids.shape[0]
+    G = num_groups
+    R = ragged_rows(A, G, block)
+    if A == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((G + 1,), jnp.int32),
+                jnp.full((R,), -1, jnp.int32))
+    keys = jnp.where(valid, group_ids.astype(jnp.int32), G)
+    idx = jnp.arange(A, dtype=jnp.int32)
+    if (G + 1) * A < 2**31:
+        sp = jax.lax.sort(keys * A + idx)         # packed single-operand sort
+        order = (sp % A).astype(jnp.int32)
+        skeys = (sp // A).astype(jnp.int32)
+    else:
+        order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+        skeys = jnp.take(keys, order)
+    # raw segment bounds in sorted order; bounds[G] == number of valid rows
+    bounds = jnp.searchsorted(
+        skeys, jnp.arange(G + 1, dtype=jnp.int32)).astype(jnp.int32)
+    lens = bounds[1:] - bounds[:-1]                               # (G,)
+    aligned = ((lens + block - 1) // block) * block
+    group_starts = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(aligned).astype(jnp.int32)])
+    pos_s = idx - jnp.take(bounds, skeys)          # within-segment position
+    valid_s = skeys < G
+    arow = jnp.take(group_starts, jnp.minimum(skeys, G)) + pos_s
+    arow = jnp.where(valid_s, arow, R)             # sentinel: off the layout
+    rank = jnp.zeros((A,), jnp.int32).at[order].set(
+        jnp.where(valid_s, arow, -1))
+    row_src = jnp.full((R,), -1, jnp.int32).at[arow].set(order, mode="drop")
+    return rank, group_starts, row_src
+
+
+def ragged_tile_gids(group_starts: jax.Array, n_tiles: int,
+                     block: int) -> jax.Array:
+    """Group id owning each row tile of the ragged layout.
+
+    Segment starts are tile-aligned, so every tile belongs to exactly one
+    group; tiles past the last segment clamp to the final group (their rows
+    are zero, so they contribute nothing through the FFN).
+    """
+    t0 = jnp.arange(n_tiles, dtype=jnp.int32) * block
+    gid = jnp.searchsorted(group_starts, t0, side="right").astype(jnp.int32) - 1
+    return jnp.clip(gid, 0, group_starts.shape[0] - 2)
+
+
+# =============================================================================
 # The pluggable interface
 # =============================================================================
 
@@ -155,6 +288,11 @@ class CombineState:
     Array fields are flat per-assignment (A = out_tokens * k,) except
     ``slot_assign`` (sort backend only): (num_groups * cap,) assignment
     index per buffer slot, -1 = empty.
+
+    The ``"dropless"`` backend reuses the fields for its flat ragged layout:
+    ``pos`` holds each assignment's *row* in the (R,) layout (-1 invalid),
+    ``slot_assign`` the (R,) row -> assignment map (-1 padding), and ``cap``
+    the row-tile size ``block`` (there is no capacity).
     """
     group_ids: jax.Array
     pos: jax.Array
@@ -207,32 +345,83 @@ def dispatch(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
 
     if backend != "sort":
         raise ValueError(f"unknown dispatch backend {backend!r}; "
-                         f"expected one of {BACKENDS}")
+                         f"expected \"dense\" or \"sort\" (capacity-buffer "
+                         f"backends; for \"dropless\" use dispatch_ragged)")
     pos, keep, slot_assign = sort_positions(group_ids, valid, num_groups, cap)
+    state = CombineState(group_ids, pos, keep, gates, slot_assign,
+                         num_groups, cap, k, t, backend, use_kernel)
+    if t == 0:
+        # empty local batch (serving): nothing to gather from
+        return jnp.zeros((num_groups, cap, d), x.dtype), state
     token_src = jnp.where(slot_assign >= 0, slot_assign // k, -1)
     if use_kernel:
         from repro.kernels import ops as kops
         rows = kops.dispatch_gather(x, token_src)
     else:
         rows = ref.dispatch_gather_ref(x, token_src)
-    state = CombineState(group_ids, pos, keep, gates, slot_assign,
-                         num_groups, cap, k, t, backend, use_kernel)
     return rows.reshape(num_groups, cap, d), state
 
 
+def dispatch_ragged(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
+                    num_groups: int, *, k: int = 1,
+                    valid: Optional[jax.Array] = None,
+                    block: Optional[int] = None, use_kernel: bool = False
+                    ) -> Tuple[jax.Array, jax.Array, CombineState]:
+    """Capacity-free dispatch into the tile-aligned ragged layout.
+
+    Same contract as :func:`dispatch` but with no capacity buffer: returns
+    ``(rows, group_starts, state)`` where ``rows`` is the flat ``(R, d)``
+    gathered array (R static, see :func:`ragged_rows`), ``group_starts`` the
+    ``(num_groups+1,)`` aligned segment offsets consumed by the ragged
+    grouped FFN, and ``state`` feeds :func:`combine` / :func:`dispatch_flags`
+    as usual.  No assignment is ever dropped (``state.keep == valid``).
+    """
+    t, d = x.shape
+    A = group_ids.shape[0]
+    if A != t * k:
+        raise ValueError(f"group_ids {A} != tokens {t} * k {k}")
+    if valid is None:
+        valid = jnp.ones((A,), bool)
+    blk = _ragged_block(A, num_groups, block, use_kernel)
+    rank, group_starts, row_src = ragged_positions(group_ids, valid,
+                                                   num_groups, blk)
+    state = CombineState(group_ids, rank, valid, gates, row_src,
+                         num_groups, blk, k, t, "dropless", use_kernel)
+    R = row_src.shape[0]
+    if t == 0:
+        return jnp.zeros((R, d), x.dtype), group_starts, state
+    token_src = jnp.where(row_src >= 0, row_src // k, -1)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        rows = kops.dispatch_gather(x, token_src)
+    else:
+        rows = ref.dispatch_gather_ref(x, token_src)
+    return rows, group_starts, state
+
+
 def combine(buf: jax.Array, state: CombineState) -> jax.Array:
-    """Read a (num_groups, cap, d) buffer back to (t, d) token order,
-    weighting each surviving assignment by its gate."""
+    """Read expert outputs back to (t, d) token order, weighting each
+    surviving assignment by its gate.  ``buf`` is the (num_groups, cap, d)
+    capacity buffer for the dense/sort backends, or the flat (R, d) ragged
+    row array for the dropless backend."""
     d = buf.shape[-1]
     if state.backend == "dense":
         return combine_gather(buf, state.group_ids, state.pos, state.keep,
                               state.gates, state.out_tokens, state.k)
-    rows = buf.reshape(state.num_groups * state.cap, d)
-    src = jnp.where(state.keep,
-                    state.group_ids.astype(jnp.int32) * state.cap + state.pos,
-                    -1).reshape(state.out_tokens, state.k)
+    if state.backend == "dropless":
+        rows = buf                                       # already flat (R, d)
+        src = jnp.where(state.keep, state.pos, -1
+                        ).reshape(state.out_tokens, state.k)
+    else:
+        rows = buf.reshape(state.num_groups * state.cap, d)
+        src = jnp.where(
+            state.keep,
+            state.group_ids.astype(jnp.int32) * state.cap + state.pos,
+            -1).reshape(state.out_tokens, state.k)
     scale = (state.gates * state.keep.astype(state.gates.dtype)
              ).reshape(state.out_tokens, state.k)
+    if state.out_tokens == 0:
+        return jnp.zeros((0, d), buf.dtype)
     if state.use_kernel:
         from repro.kernels import ops as kops
         return kops.combine_gather(rows, src, scale)
@@ -240,11 +429,17 @@ def combine(buf: jax.Array, state: CombineState) -> jax.Array:
 
 
 def dispatch_flags(vals: jax.Array, state: CombineState) -> jax.Array:
-    """Place per-assignment scalars (A,) into a (num_groups, cap) buffer
-    mirroring the token dispatch (zeros in empty slots)."""
+    """Place per-assignment scalars (A,) into a buffer mirroring the token
+    dispatch (zeros in empty slots): (num_groups, cap) for the capacity
+    backends, flat (R,) for the dropless ragged layout."""
     if state.backend == "dense":
         return scatter_flags(vals, state.group_ids, state.pos, state.keep,
                              state.num_groups, state.cap)
     sa = state.slot_assign
-    got = jnp.take(vals, jnp.maximum(sa, 0)) * (sa >= 0).astype(vals.dtype)
+    if vals.shape[0] == 0:                       # empty local batch
+        got = jnp.zeros(sa.shape, vals.dtype)
+    else:
+        got = jnp.take(vals, jnp.maximum(sa, 0)) * (sa >= 0).astype(vals.dtype)
+    if state.backend == "dropless":
+        return got                                       # flat (R,)
     return got.reshape(state.num_groups, state.cap)

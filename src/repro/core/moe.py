@@ -36,6 +36,16 @@ subsystem in :mod:`repro.core.dispatch`, selected by
   :mod:`repro.kernels.moe_dispatch` (``use_kernel=True``).
 * ``"dense"`` — the O(tokens x groups) one-hot/cumsum oracle, kept for
   verification and as the equivalence reference in tests.
+* ``"dropless"`` — capacity-free expert compute: tokens are compacted into
+  the tile-aligned ragged layout of :func:`repro.core.dispatch.dispatch_ragged`
+  and the expert FFN runs over *exact* per-group segment lengths through the
+  ragged grouped-matmul kernel (:mod:`repro.kernels.grouped_ffn`) — zero
+  capacity padding and zero token drops wherever the expert grid is local.
+  Capacity buffers are kept only where a fixed-shape All2All payload is
+  genuinely required (the collective hops of a multi-device grid); there the
+  received buffer is re-compacted per local group before the FFN, so the
+  MXU still never touches padding (the ragged-A2A follow-up in ROADMAP.md
+  would remove the remaining hop padding too).
 
 Both routing schedules run every dispatch hop (one for switch, two per
 direction for SMILE) through the same interface, so a backend improvement
@@ -140,6 +150,63 @@ def experts_ffn(w: Dict[str, jax.Array], x: jax.Array, act: str,
     if "w3" in w and w["w3"] is not None:
         h = h * jnp.einsum("gtd,gdf->gtf", x, w["w3"].astype(x.dtype))
     return jnp.einsum("gtf,gfd->gtd", h, w["w2"].astype(x.dtype))
+
+
+def experts_ffn_ragged(w: Dict[str, jax.Array], rows: jax.Array,
+                       group_starts: jax.Array, act: str, *,
+                       block: int, use_kernel: bool = False) -> jax.Array:
+    """Expert FFN over the dropless tile-aligned ragged layout.
+
+    ``rows``: (R, d) flat row array from :func:`repro.core.dispatch.
+    dispatch_ragged`; ``group_starts``: (G+1,) aligned segment offsets;
+    ``block``: the layout's row-tile size.  The non-kernel path runs one
+    batched matmul over the row tiles with per-tile weight selection —
+    every tile belongs to exactly one group, so this is the jnp shadow of
+    the Pallas kernel's scalar-prefetched weight indirection.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.grouped_ffn_ragged(rows, group_starts, w["w1"],
+                                       w.get("w3"), w["w2"], block=block,
+                                       act=act)
+    R, d = rows.shape
+    tile_gid = D.ragged_tile_gids(group_starts, R // block, block)
+    xt = rows.reshape(R // block, block, d)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = actf(jnp.einsum("tbd,tdf->tbf", xt,
+                        jnp.take(w["w1"].astype(rows.dtype), tile_gid, axis=0)))
+    if "w3" in w and w["w3"] is not None:
+        h = h * jnp.einsum("tbd,tdf->tbf", xt,
+                           jnp.take(w["w3"].astype(rows.dtype), tile_gid,
+                                    axis=0))
+    y = jnp.einsum("tbf,tfd->tbd", h,
+                   jnp.take(w["w2"].astype(rows.dtype), tile_gid, axis=0))
+    return y.reshape(R, d)
+
+
+def experts_ffn_compact(w: Dict[str, jax.Array], recv: jax.Array,
+                        valid: jax.Array, act: str,
+                        use_kernel: bool = False) -> jax.Array:
+    """Dropless expert compute over a *received* capacity buffer.
+
+    When a fixed-shape All2All hop is unavoidable, the received
+    ``(G, S, d)`` buffer still carries ``(cf - 1)/cf`` padding rows.  This
+    compacts the valid rows (``valid``: (G, S) bool) into the ragged layout,
+    runs the FFN over exact segment lengths, and scatters results back to
+    the fixed slot layout (empty slots stay zero, matching what the padded
+    FFN would have produced) — the MegaScale-MoE "no padding into the FFN"
+    hot-path fix with the collective left untouched.
+    """
+    G, S, d = recv.shape
+    flat = recv.reshape(G * S, d)
+    rgid = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
+    ones = jnp.ones((G * S,), jnp.float32)
+    rows, starts, st = D.dispatch_ragged(flat, rgid, ones, G, k=1,
+                                         valid=valid.reshape(-1),
+                                         use_kernel=use_kernel)
+    out = experts_ffn_ragged(w, rows, starts, act, block=st.cap,
+                             use_kernel=use_kernel)
+    return D.combine(out, st).reshape(G, S, d)
 
 
 # =============================================================================
@@ -256,41 +323,70 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     v = node * layout.virtual_per_node + v_in_node              # (A,)
 
     V = layout.virtual_total
-    cap = capacity(t, k, cfg.capacity_factor, V)
-    buf, dstate = D.dispatch(x, v, gates.reshape(-1), V, cap, k=k,
-                             backend=cfg.dispatch_backend,
-                             use_kernel=use_kernel)              # (V, cap, d)
-    keep = dstate.keep
-
-    # ---- single flat All2All over the combined grid ------------------------
     nm_mesh = plan.ep
     b_n = n_g // max(plan.n_inter, 1)
     b_m = m_g // max(plan.n_intra, 1)
-    # (n_g, m_g*h, cap, d) -> (n_mesh, b_n, m_mesh, b_m*h, cap, d)
-    buf = buf.reshape(max(plan.n_inter, 1), b_n, max(plan.n_intra, 1),
-                      b_m * layout.h, cap, d)
-    buf = buf.transpose(0, 2, 1, 3, 4, 5)                       # mesh dims first
-    buf = buf.reshape(nm_mesh, b_n * b_m * layout.h, cap, d)
-    recv = _fold_a2a(buf, nm_mesh, plan.ep_axes, nm_mesh)       # src-major
+    dropless = cfg.dispatch_backend == "dropless"
 
-    # ---- expert compute ----------------------------------------------------
-    wsel, n_groups = _my_expert_weights(params["experts"], layout, plan, b_n, b_m)
-    # recv: (src, my_groups, cap, d) -> (my_groups, src*cap, d)
-    recv = recv.reshape(nm_mesh, n_groups, cap, d).transpose(1, 0, 2, 3)
-    recv = recv.reshape(n_groups, nm_mesh * cap, d)
-    out = experts_ffn(wsel, recv, act, use_kernel)
+    if dropless and nm_mesh == 1:
+        # ---- fully capacity-free: the whole expert grid is local ------------
+        # no (V, cap, d) buffer, no padding into the FFN, zero token drops
+        rows, starts, dstate = D.dispatch_ragged(x, v, gates.reshape(-1), V,
+                                                 k=k, use_kernel=use_kernel)
+        keep = dstate.keep
+        wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
+                                            b_n, b_m)
+        out_rows = experts_ffn_ragged(wsel, rows, starts, act,
+                                      block=dstate.cap, use_kernel=use_kernel)
+        y = D.combine(out_rows, dstate)
+    else:
+        # capacity buffers only where the fixed-shape All2All payload needs
+        # them; dropless runs the hop on the sort backend's mechanics
+        hop_backend = "sort" if dropless else cfg.dispatch_backend
+        cap = capacity(t, k, cfg.capacity_factor, V)
+        buf, dstate = D.dispatch(x, v, gates.reshape(-1), V, cap, k=k,
+                                 backend=hop_backend,
+                                 use_kernel=use_kernel)          # (V, cap, d)
+        keep = dstate.keep
 
-    # ---- reverse All2All ---------------------------------------------------
-    out = out.reshape(n_groups, nm_mesh, cap, d).transpose(1, 0, 2, 3)
-    out = out.reshape(nm_mesh, n_groups * cap * d)
-    back = _fold_a2a(out, nm_mesh, plan.ep_axes, nm_mesh)
-    back = back.reshape(nm_mesh, n_groups, cap, d)
-    # undo the mesh-major transpose: -> (n_g, m_g*h, cap, d)
-    back = back.reshape(max(plan.n_inter, 1), max(plan.n_intra, 1), b_n,
-                        b_m * layout.h, cap, d)
-    back = back.transpose(0, 2, 1, 3, 4, 5).reshape(V, cap, d)
+        # ---- single flat All2All over the combined grid --------------------
+        def fold(z):
+            # (V, cap, ...) -> mesh-major -> (groups, src*cap, ...)
+            rest = z.shape[1:]
+            z = z.reshape((max(plan.n_inter, 1), b_n, max(plan.n_intra, 1),
+                           b_m * layout.h) + rest)
+            z = jnp.moveaxis(z, 2, 1)                   # mesh dims first
+            z = z.reshape((nm_mesh, b_n * b_m * layout.h) + rest)
+            z = _fold_a2a(z, nm_mesh, plan.ep_axes, nm_mesh)    # src-major
+            z = z.reshape((nm_mesh, n_groups) + rest)
+            return jnp.moveaxis(z, 1, 0).reshape(
+                (n_groups, nm_mesh * rest[0]) + rest[1:])
 
-    y = D.combine(back, dstate)
+        wsel, n_groups = _my_expert_weights(params["experts"], layout,
+                                            plan, b_n, b_m)
+        recv = fold(buf)                                # (groups, src*cap, d)
+
+        # ---- expert compute -------------------------------------------------
+        if dropless:
+            # ragged re-compaction: the A2A keeps its fixed shape, but the
+            # FFN only sees the valid rows of the received buffer
+            slot_valid = D.dispatch_flags(keep.astype(jnp.float32), dstate)
+            rvalid = fold(slot_valid) > 0               # (groups, src*cap)
+            out = experts_ffn_compact(wsel, recv, rvalid, act, use_kernel)
+        else:
+            out = experts_ffn(wsel, recv, act, use_kernel)
+
+        # ---- reverse All2All ------------------------------------------------
+        out = out.reshape(n_groups, nm_mesh, cap, d).transpose(1, 0, 2, 3)
+        out = out.reshape(nm_mesh, n_groups * cap * d)
+        back = _fold_a2a(out, nm_mesh, plan.ep_axes, nm_mesh)
+        back = back.reshape(nm_mesh, n_groups, cap, d)
+        # undo the mesh-major transpose: -> (n_g, m_g*h, cap, d)
+        back = back.reshape(max(plan.n_inter, 1), max(plan.n_intra, 1), b_n,
+                            b_m * layout.h, cap, d)
+        back = back.transpose(0, 2, 1, 3, 4, 5).reshape(V, cap, d)
+
+        y = D.combine(back, dstate)
 
     # ---- losses -------------------------------------------------------------
     top1 = eidx[:, 0]
@@ -299,7 +395,7 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     zl = z_loss(logits, jnp.ones((t,), bool), cfg.router_z_coef, sync)
     dropped = comm.psum((~keep).sum().astype(jnp.float32), sync)
     total = comm.psum(jnp.float32(A), sync)
-    return y, MoEStats(lb, zl, dropped / total)
+    return y, MoEStats(lb, zl, dropped / jnp.maximum(total, 1))
 
 
 # =============================================================================
@@ -323,6 +419,12 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     e_pn = layout.experts_per_node
     k_local = max(1, cfg.top_k // top_g)
     sync = _sync_axes(plan)
+    dropless = cfg.dispatch_backend == "dropless"
+    # level 1 feeds the inter-node All2All — a fixed-shape payload is
+    # genuinely required there, so dropless keeps the capacity buffer for
+    # this hop (on the sort backend's mechanics) and goes capacity-free at
+    # the level-2 expert compute below
+    hop_backend = "sort" if dropless else cfg.dispatch_backend
 
     # ---------------- level 1: route to node --------------------------------
     p_probs, p_logits = router_probs(x, params["router_inter"]["w"])  # (t, n)
@@ -331,7 +433,7 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     A1 = n1.shape[0]
     cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
     buf1, st1 = D.dispatch(x, n1, p_gates.reshape(-1), n_g, cap1,
-                           k=top_g, backend=cfg.dispatch_backend,
+                           k=top_g, backend=hop_backend,
                            use_kernel=use_kernel)                     # (n_g,C1,d)
     keep1 = st1.keep
     vflag = D.dispatch_flags(jnp.ones((A1,), jnp.float32), st1)       # (n_g,C1)
@@ -365,49 +467,74 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     node_of = jnp.repeat(jnp.arange(b_n), n_mesh * cap1 * k_local)
     v2 = node_of * layout.virtual_per_node + v_in_node
     V2 = b_n * layout.virtual_per_node
-    if cfg.tight_level2_capacity:
-        # beyond-paper: the level-1 buffer is ~cap-factor x larger than the
-        # tokens it actually carries; sizing level-2 capacity from EXPECTED
-        # valid arrivals (t * g / n per node, x cap headroom) instead of the
-        # padded buffer removes the capacity compounding that doubles the
-        # intra-node All2All payload. Drop stats confirm no extra drops at
-        # uniform routing (EXPERIMENTS.md §Perf-2).
-        expected = max(1, math.ceil(t * top_g / n_g))
-        cap2 = capacity(expected, k_local, cfg.capacity_factor,
-                        layout.virtual_per_node)
-    else:
-        cap2 = capacity(n_mesh * cap1, k_local, cfg.capacity_factor,
-                        layout.virtual_per_node)
-    buf2, st2 = D.dispatch(x1, v2, q_gates.reshape(-1), V2, cap2,
-                           k=k_local, valid=validA,
-                           backend=cfg.dispatch_backend,
-                           use_kernel=use_kernel)             # (V2, C2, d)
-    keep2 = st2.keep
-
     m_mesh = max(plan.n_intra, 1)
     b_mh = layout.virtual_per_node // m_mesh                  # groups per rank
-    # (b_n, m_mesh, b_mh, C2, d): intra A2A per node block
-    buf2 = buf2.reshape(b_n, m_mesh, b_mh, cap2, d)
-    buf2 = buf2.transpose(1, 0, 2, 3, 4).reshape(m_mesh, b_n * b_mh, cap2, d)
-    recv2 = _fold_a2a(buf2, m_mesh, plan.ep_intra, m_mesh)    # (m*.., C2, d)
-
-    # ---------------- expert compute -----------------------------------------
     b_m = m_g // m_mesh
     wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
                                         b_n, b_m)
     assert n_groups == b_n * b_mh, (n_groups, b_n, b_mh)
-    recv2 = recv2.reshape(m_mesh, n_groups, cap2, d).transpose(1, 0, 2, 3)
-    recv2 = recv2.reshape(n_groups, m_mesh * cap2, d)
-    out = experts_ffn(wsel, recv2, act, use_kernel)
 
-    # ---------------- reverse level 2 ----------------------------------------
-    out = out.reshape(n_groups, m_mesh, cap2, d).transpose(1, 0, 2, 3)
-    out = out.reshape(m_mesh, n_groups * cap2 * d)
-    back2 = _fold_a2a(out, m_mesh, plan.ep_intra, m_mesh)
-    back2 = back2.reshape(m_mesh, b_n, b_mh, cap2, d).transpose(1, 0, 2, 3, 4)
-    back2 = back2.reshape(V2, cap2, d)
-    # apply intra gates where q is known (the intermediate hop)
-    y1 = D.combine(back2, st2)                                 # (t1, d)
+    if dropless and m_mesh == 1:
+        # ---------------- level 2, capacity-free ------------------------------
+        # the intra-node expert grid is local: no (V2, C2, d) buffer, no
+        # level-2 capacity drops, FFN over exact per-group segment lengths
+        rows2, starts2, st2 = D.dispatch_ragged(x1, v2, q_gates.reshape(-1),
+                                                V2, k=k_local, valid=validA,
+                                                use_kernel=use_kernel)
+        keep2 = st2.keep
+        out_rows = experts_ffn_ragged(wsel, rows2, starts2, act,
+                                      block=st2.cap, use_kernel=use_kernel)
+        y1 = D.combine(out_rows, st2)                          # (t1, d)
+    else:
+        if cfg.tight_level2_capacity:
+            # beyond-paper: the level-1 buffer is ~cap-factor x larger than
+            # the tokens it actually carries; sizing level-2 capacity from
+            # EXPECTED valid arrivals (t * g / n per node, x cap headroom)
+            # instead of the padded buffer removes the capacity compounding
+            # that doubles the intra-node All2All payload. Drop stats confirm
+            # no extra drops at uniform routing (EXPERIMENTS.md §Perf-2).
+            expected = max(1, math.ceil(t * top_g / n_g))
+            cap2 = capacity(expected, k_local, cfg.capacity_factor,
+                            layout.virtual_per_node)
+        else:
+            cap2 = capacity(n_mesh * cap1, k_local, cfg.capacity_factor,
+                            layout.virtual_per_node)
+        buf2, st2 = D.dispatch(x1, v2, q_gates.reshape(-1), V2, cap2,
+                               k=k_local, valid=validA,
+                               backend=hop_backend,
+                               use_kernel=use_kernel)         # (V2, C2, d)
+        keep2 = st2.keep
+
+        def fold2(z):
+            # (V2, C2, ...) -> intra A2A per node block -> (groups, m*C2, ...)
+            rest = z.shape[1:]
+            z = z.reshape((b_n, m_mesh, b_mh) + rest)
+            z = jnp.moveaxis(z, 1, 0).reshape((m_mesh, b_n * b_mh) + rest)
+            z = _fold_a2a(z, m_mesh, plan.ep_intra, m_mesh)   # (m*.., C2, ..)
+            z = z.reshape((m_mesh, n_groups) + rest)
+            return jnp.moveaxis(z, 1, 0).reshape(
+                (n_groups, m_mesh * rest[0]) + rest[1:])
+
+        recv2 = fold2(buf2)                                   # (groups, S, d)
+
+        # ---------------- expert compute -------------------------------------
+        if dropless:
+            # fixed-shape intra A2A retained; FFN only sees valid rows
+            slot_valid2 = D.dispatch_flags(keep2.astype(jnp.float32), st2)
+            rvalid2 = fold2(slot_valid2) > 0                  # (groups, S)
+            out = experts_ffn_compact(wsel, recv2, rvalid2, act, use_kernel)
+        else:
+            out = experts_ffn(wsel, recv2, act, use_kernel)
+
+        # ---------------- reverse level 2 ------------------------------------
+        out = out.reshape(n_groups, m_mesh, cap2, d).transpose(1, 0, 2, 3)
+        out = out.reshape(m_mesh, n_groups * cap2 * d)
+        back2 = _fold_a2a(out, m_mesh, plan.ep_intra, m_mesh)
+        back2 = back2.reshape(m_mesh, b_n, b_mh, cap2, d
+                              ).transpose(1, 0, 2, 3, 4)
+        back2 = back2.reshape(V2, cap2, d)
+        # apply intra gates where q is known (the intermediate hop)
+        y1 = D.combine(back2, st2)                             # (t1, d)
 
     # ---------------- reverse level 1 ----------------------------------------
     y1 = y1.reshape(b_n, n_mesh, cap1, d).transpose(1, 0, 2, 3)
@@ -424,10 +551,18 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     lb_intra = scaled_lb_loss(f_j, Q_j, cfg.lb_beta)
     zl = (z_loss(p_logits, jnp.ones((t,), bool), cfg.router_z_coef, sync)
           + z_loss(q_logits, valid1, cfg.router_z_coef, sync2))
-    dropped = comm.psum((~keep1).sum().astype(jnp.float32), sync) + \
-        comm.psum((validA & ~keep2).sum().astype(jnp.float32), sync2)
-    total = comm.psum(jnp.float32(A1), sync)
-    return y, MoEStats(lb_inter + lb_intra, zl, dropped / jnp.maximum(total, 1))
+    # drop_frac: each level normalized by ITS OWN valid-assignment count,
+    # then summed (levels compound).  Normalizing level-2 drops by the
+    # level-1 count (the old math) mis-scaled the stat whenever the counts
+    # differ — e.g. top_k > top_g makes A2's valid count ~k_local x A1, so
+    # level-2 drops were over-weighted by that factor.
+    dropped1 = comm.psum((~keep1).sum().astype(jnp.float32), sync)
+    total1 = comm.psum(jnp.float32(A1), sync)
+    dropped2 = comm.psum((validA & ~keep2).sum().astype(jnp.float32), sync2)
+    total2 = comm.psum(validA.sum().astype(jnp.float32), sync2)
+    drop_frac = (dropped1 / jnp.maximum(total1, 1)
+                 + dropped2 / jnp.maximum(total2, 1))
+    return y, MoEStats(lb_inter + lb_intra, zl, drop_frac)
 
 
 # =============================================================================

@@ -19,6 +19,12 @@ every byte moved is a byte the buffer needs.
   (``src < 0``) contributing zero.  Gate weighting and the k-way reduction
   are fused with the gather (grid ``(t, k)``, output revisited over j with
   fp32 accumulation).
+
+Both kernels are layout-agnostic row gathers, so they serve the capacity
+buffers (``R = num_groups * cap``, slot-major) and the dropless tile-aligned
+ragged layout (``R = ragged_rows(...)``, segment-major with ``-1`` alignment
+padding) without change — the backends differ only in the ``src`` maps they
+prefetch.
 """
 from __future__ import annotations
 

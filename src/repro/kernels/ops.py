@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attn import flash_attention_pallas
-from repro.kernels.grouped_ffn import grouped_ffn_pallas
+from repro.kernels.grouped_ffn import (grouped_ffn_pallas,
+                                       grouped_ffn_ragged_pallas)
 from repro.kernels.moe_dispatch import (combine_gather_pallas,
                                         dispatch_gather_pallas)
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
@@ -37,12 +38,32 @@ def grouped_ffn(x, w1, w3, w2, *, act: str = "gelu"):
                               interpret=_interpret())
 
 
+def grouped_ffn_ragged(rows, group_starts, w1, w3, w2, *, block: int,
+                       act: str = "gelu"):
+    """Ragged grouped FFN over the dropless tile-aligned layout.
+    rows: (R, d) with R a multiple of ``block``; group_starts: (G+1,)
+    aligned segment offsets.  Falls back to the jnp oracle for
+    tiny/misaligned shapes."""
+    from repro.core.dispatch import ragged_tile_gids
+    R, d = rows.shape
+    if R == 0 or R < 16 or d % 8 or block < 8:
+        return ref.grouped_ffn_ragged_ref(rows, group_starts, w1, w3, w2,
+                                          act=act)
+    tile_gid = ragged_tile_gids(group_starts, R // block, block)
+    return grouped_ffn_ragged_pallas(rows, tile_gid, w1.astype(rows.dtype),
+                                     None if w3 is None else w3.astype(rows.dtype),
+                                     w2.astype(rows.dtype), act=act,
+                                     interpret=_interpret())
+
+
 def dispatch_gather(x, src):
     """MoE dispatch: gather token rows into the flat capacity buffer.
     Falls back to the jnp oracle for tiny shapes (interpret-mode / grid
     overhead dominates below a few VPU rows)."""
     T, d = x.shape
     R = src.shape[0]
+    if T == 0:
+        return jnp.zeros((R, d), x.dtype)
     if R < 16 or d % 8:
         return ref.dispatch_gather_ref(x, src)
     return dispatch_gather_pallas(x, src.astype(jnp.int32),
@@ -54,6 +75,8 @@ def combine_gather(rows, src, scale):
     token order. rows: (R, d); src/scale: (t, k)."""
     t, k = src.shape
     d = rows.shape[-1]
+    if rows.shape[0] == 0 or t == 0:
+        return jnp.zeros((t, d), rows.dtype)
     if t < 16 or d % 8:
         return ref.combine_gather_ref(rows, src, scale)
     return combine_gather_pallas(rows, src.astype(jnp.int32),

@@ -21,6 +21,30 @@ def grouped_ffn_ref(x, w1, w3, w2, *, act: str = "gelu"):
     return y.astype(x.dtype)
 
 
+def grouped_ffn_ragged_ref(rows, group_starts, w1, w3, w2, *, act: str = "gelu"):
+    """Ragged grouped FFN oracle over the tile-aligned dropless layout.
+
+    rows: (R, d) flat row array sorted by group (alignment padding rows are
+    zero); group_starts: (G+1,) aligned segment offsets; w1/w3: (G, d, f);
+    w2: (G, f, d).  Each row is pushed through its own group's expert via a
+    per-row weight gather — O(R * d * f) memory, clarity over speed.
+    """
+    R = rows.shape[0]
+    gid = jnp.searchsorted(group_starts,
+                           jnp.arange(R, dtype=jnp.int32), side="right") - 1
+    gid = jnp.clip(gid, 0, w1.shape[0] - 1)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    xf = rows.astype(jnp.float32)
+    h = actf(jnp.einsum("rd,rdf->rf", xf, jnp.take(w1, gid, axis=0)
+                        .astype(jnp.float32)))
+    if w3 is not None:
+        h = h * jnp.einsum("rd,rdf->rf", xf, jnp.take(w3, gid, axis=0)
+                           .astype(jnp.float32))
+    y = jnp.einsum("rf,rfd->rd", h.astype(rows.dtype).astype(jnp.float32),
+                   jnp.take(w2, gid, axis=0).astype(jnp.float32))
+    return y.astype(rows.dtype)
+
+
 def dispatch_gather_ref(x, src):
     """MoE dispatch gather. x: (T, d); src: (R,) int32 source row per
     buffer slot, -1 = empty slot -> zeros. Returns (R, d)."""

@@ -62,6 +62,9 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         import dataclasses
         cfg = cfg.replace(moe=dataclasses.replace(
             cfg.moe, tight_level2_capacity=True))
+    if "dropless" in opt_set and cfg.moe is not None:
+        from repro.configs import with_dispatch_backend
+        cfg = with_dispatch_backend(cfg, "dropless")
     mesh = make_production_mesh(multi_pod=multi_pod)
     inter = ("pod", "data") if "epxpod" in opt_set else None
     plan = plan_from_mesh(mesh, smile_inter_axes=inter)
@@ -182,7 +185,8 @@ def main():
     ap.add_argument("--router", choices=["smile", "switch"], default=None,
                     help="override MoE router (baseline comparisons)")
     ap.add_argument("--tag", default="")
-    ap.add_argument("--opt", default="", help="comma list: rsc,kvseq,tightcap")
+    ap.add_argument("--opt", default="",
+                    help="comma list: rsc,kvseq,tightcap,dropless")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--out", default="experiments/dryrun")

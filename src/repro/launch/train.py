@@ -31,8 +31,12 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
           batch: int = 16, seq: int = 128, lr: float = 3e-4,
           optimizer: str = "lamb", seed: int = 0, log_every: int = 10,
           ckpt: str = "", mesh=None, micro_batch: int = 0,
-          log_file: str = "", zero1: bool = False, eval_every: int = 0):
+          log_file: str = "", zero1: bool = False, eval_every: int = 0,
+          dispatch_backend: str = ""):
     cfg = get_reduced(arch) if reduced else get_config(arch)
+    if dispatch_backend:
+        from repro.configs import with_dispatch_backend
+        cfg = with_dispatch_backend(cfg, dispatch_backend)
     plan = plan_from_mesh(mesh) if mesh is not None else single_device_plan()
     tcfg = TrainConfig(global_batch_size=batch, seq_len=seq, steps=steps,
                        optimizer=optimizer, lr=lr, warmup_steps=max(steps // 10, 1),
@@ -99,12 +103,16 @@ def main():
     ap.add_argument("--zero1", action="store_true",
                     help="shard optimizer state over replicated axes")
     ap.add_argument("--eval-every", type=int, default=0)
+    ap.add_argument("--dispatch-backend", default="",
+                    choices=["", "sort", "dense", "dropless"],
+                    help="override MoEConfig.dispatch_backend "
+                         "(dropless = capacity-free expert compute)")
     args = ap.parse_args()
     train(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
           seq=args.seq, lr=args.lr, optimizer=args.optimizer, seed=args.seed,
           ckpt=args.ckpt, micro_batch=args.micro_batch,
           log_file=args.log_file, zero1=args.zero1,
-          eval_every=args.eval_every)
+          eval_every=args.eval_every, dispatch_backend=args.dispatch_backend)
 
 
 if __name__ == "__main__":

@@ -104,10 +104,28 @@ def rwkv_tmix_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
                        vv.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3)))
         y = ys.transpose(1, 0, 2, 3)                            # (B,T,nh,hd)
 
-    # per-head group norm, then gate and output projection
+    # per-head group norm, then gate and output projection.
+    #
+    # GN_EPS is deliberately larger than a dense-activation LayerNorm's 1e-5:
+    # early in the sequence the WKV state holds few (k v) outer products, so
+    # ``y`` is near rank-1 across hd and ``var`` can be ~0 while |y| is O(10).
+    # With eps=1e-5 the normalization multiplies by up to rsqrt(eps) ~ 316,
+    # amplifying last-ulp differences in ``y`` (XLA compiles the upstream
+    # einsums differently per local shard shape, so dp/tp sharding perturbs
+    # the last bit) into ~1e-4 per layer — the rwkv6 distributed-equivalence
+    # failure tracked in ROADMAP.md.  Upstream RWKV caps the same blow-up by
+    # scaling GroupNorm's eps with the head size (head_size_divisor^2 * 1e-5
+    # = 64e-5); measured on the (2,2) train-equiv harness that value still
+    # leaves rel_gnorm at 1.3e-1 (threshold 6e-2), so this repro uses 1e-3
+    # (~16x upstream), which bounds the amplification to ~32x and lands
+    # rel_gnorm at 1.4e-2..2.8e-2 across seeds (EXPERIMENTS.md §Num-1).
+    # Negligible wherever var is non-degenerate, but NOTE: weights ported
+    # from upstream RWKV6 checkpoints will see slightly different
+    # activations at the degenerate early-sequence slots.
+    GN_EPS = 1e-3
     mu = y.mean(-1, keepdims=True)
     var = ((y - mu) ** 2).mean(-1, keepdims=True)
-    y = (y - mu) * lax.rsqrt(var + 1e-5) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
+    y = (y - mu) * lax.rsqrt(var + GN_EPS) * p["ln_x"]["scale"] + p["ln_x"]["bias"]
     y = (y * gv).astype(x.dtype)
     out = jnp.einsum("bthk,hkd->btd", y, p["wo"].astype(x.dtype))
     out = comm.name_saved(comm.psum(out, plan.tp_axis))

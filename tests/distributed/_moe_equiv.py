@@ -25,14 +25,18 @@ plan = test_plan(n_inter=4, n_intra=2)
 oracle = single_device_plan()
 d = 32
 
-CASES = [((4, 2), 8, 1, 1), ((4, 4), 16, 2, 1), ((4, 4), 8, 4, 2),
-         ((4, 8), 8, 2, 2), ((8, 4), 32, 1, 1)]
+CASES = [((4, 2), 8, 1, 1, "sort"), ((4, 4), 16, 2, 1, "sort"),
+         ((4, 4), 8, 4, 2, "sort"), ((4, 8), 8, 2, 2, "sort"),
+         ((8, 4), 32, 1, 1, "sort"),
+         # dropless on a real mesh: fixed-shape A2A hops + ragged
+         # re-compaction of the received buffers before expert compute
+         ((4, 4), 16, 2, 1, "dropless"), ((4, 4), 8, 4, 2, "dropless")]
 
 for router in ["switch", "smile"]:
-    for grid, E, k, g in CASES:
+    for grid, E, k, g, backend in CASES:
         cfg = MoEConfig(num_experts=E, top_k=k, top_g=g, d_ff_expert=64,
                         capacity_factor=16.0, router=router, grid=grid,
-                        renorm_gates=(k > 1))
+                        renorm_gates=(k > 1), dispatch_backend=backend)
         params = init_moe_params(jax.random.PRNGKey(0), cfg, d, plan,
                                  glu=False)
         x = jax.random.normal(jax.random.PRNGKey(1), (64, d))
@@ -61,5 +65,5 @@ for router in ["switch", "smile"]:
                                    rtol=2e-4, atol=2e-5)
         np.testing.assert_allclose(float(lb_dist), float(st_ref.lb_loss),
                                    rtol=1e-4)
-        print(f"OK {router} grid={grid} E={E} k={k} g={g}")
+        print(f"OK {router} grid={grid} E={E} k={k} g={g} [{backend}]")
 print("ALL MOE EQUIV OK")
