@@ -61,6 +61,94 @@ def a2a_time(bytes_per_device: float, group: int, bw: float,
     return wire / bw * (1.0 + alpha * (flows - 1))
 
 
+# ------------------------------------------------------------ hop wire bytes
+# Per-hop payload accounting for the two dispatch-hop wire formats.  The
+# padded hop ships the full (groups, cap, d) capacity buffer regardless of
+# how many rows are real; the ragged hop ships the exact assignment rows
+# plus (a) bounded tile-alignment slack and (b) the int32 count headers
+# (one count per peer + one raw length per group).  bench_ragged_a2a.py
+# compares these MODELED numbers against counts MEASURED from live routing.
+
+BYTES_INT32 = 4
+
+
+def a2a_wire_bytes(payload_bytes: float, group: int) -> float:
+    """Bytes a flat All2All of ``payload_bytes``/device puts on the wire:
+    the (group-1)/group fraction that leaves the device."""
+    if group <= 1:
+        return 0.0
+    return payload_bytes * (group - 1) / group
+
+
+def capacity_hop_payload(tokens: int, k: int, capacity_factor: float,
+                         groups: int, d_model: int,
+                         bytes_per_elem: int = 2) -> float:
+    """Per-device payload of one capacity-padded dispatch hop: the whole
+    (groups, cap, d) buffer, ``~capacity_factor x`` the real rows (more
+    when routing is skewed and slots sit empty while others overflow)."""
+    cap = max(1, math.ceil(tokens * k * capacity_factor / groups))
+    return groups * cap * d_model * bytes_per_elem
+
+
+def ragged_hop_payload(assignments: int, groups: int, block: int,
+                       d_model: int, bytes_per_elem: int = 2,
+                       ranks: int = 1) -> float:
+    """Worst-case per-device payload of one ragged dispatch hop: every real
+    assignment row exactly once, plus at most ``block - 1`` alignment rows
+    per group, plus the count headers (a (ranks,) segment-count A2A and the
+    (groups,) raw-length grid)."""
+    rows = assignments + groups * (block - 1)
+    header = (ranks + groups) * BYTES_INT32
+    return rows * d_model * bytes_per_elem + header
+
+
+def hop_wire_report(tokens: int, k: int, capacity_factor: float, groups: int,
+                    block: int, d_model: int, ranks: int,
+                    bytes_per_elem: int = 2) -> dict:
+    """Modeled padded-vs-ragged wire bytes for one dispatch hop across
+    ``ranks`` peers.  ``reduction`` > 1 means the ragged hop ships less."""
+    padded = a2a_wire_bytes(
+        capacity_hop_payload(tokens, k, capacity_factor, groups, d_model,
+                             bytes_per_elem), ranks)
+    ragged = a2a_wire_bytes(
+        ragged_hop_payload(tokens * k, groups, block, d_model,
+                           bytes_per_elem, ranks), ranks)
+    return {"padded_bytes": padded, "ragged_bytes": ragged,
+            "reduction": padded / ragged if ragged else float("inf")}
+
+
+def hop_time_report(tokens: int, k: int, capacity_factor: float, groups: int,
+                    block: int, d_model: int, d_ff: int, ranks: int,
+                    hw: Hardware, *, inter: bool = True,
+                    bytes_per_elem: int = 2,
+                    alpha: float = DEFAULT_ALPHA) -> dict:
+    """Modeled one-hop round-trip time (dispatch A2A + expert FFN + return
+    A2A), padded vs ragged, on a real hardware profile.
+
+    Both variants re-compact before the FFN (the dropless invariant), so the
+    FFN term is identical; what differs is the collective payload.  The
+    congestion/launch model is the one calibrated against the paper's
+    Table 3 — the same ``alpha`` for both variants, so the ratio is purely
+    the byte reduction.  ``ratio`` > 1 means the ragged hop's modeled step
+    is faster; at ``capacity_factor >= 1 + alignment slack`` it always is,
+    because the ragged payload is a strict subset of the padded one.
+    """
+    bw = hw.inter_bw if inter else hw.intra_bw
+    a = alpha if inter else 0.0
+    padded = capacity_hop_payload(tokens, k, capacity_factor, groups,
+                                  d_model, bytes_per_elem)
+    ragged = ragged_hop_payload(tokens * k, groups, block, d_model,
+                                bytes_per_elem, ranks)
+    t_ffn = 2 * 2 * tokens * k * d_model * d_ff / hw.flops
+    t_pad = 2 * a2a_time(padded, ranks, bw, a) + t_ffn
+    t_rag = 2 * a2a_time(ragged, ranks, bw, a) + t_ffn
+    return {"hw": hw.name, "padded_s": t_pad, "ragged_s": t_rag,
+            "a2a_padded_s": 2 * a2a_time(padded, ranks, bw, a),
+            "a2a_ragged_s": 2 * a2a_time(ragged, ranks, bw, a),
+            "ffn_s": t_ffn,
+            "ratio": t_pad / t_rag if t_rag else float("inf")}
+
+
 def allreduce_time(bytes_per_device: float, group: int, bw: float) -> float:
     if group <= 1:
         return 0.0

@@ -13,6 +13,13 @@ cd "$(dirname "$0")"
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== repo hygiene =="
+if git ls-files '*.pyc' | grep -q .; then
+    echo "ERROR: compiled bytecode is tracked (git ls-files '*.pyc'):" >&2
+    git ls-files '*.pyc' >&2
+    exit 1
+fi
+
 echo "== tier-1 test suite =="
 python -m pytest -x -q
 

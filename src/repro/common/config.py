@@ -41,6 +41,13 @@ class MoEConfig:
     # token drops wherever the expert grid is local; capacity buffers remain
     # only on fixed-shape All2All hops.  See EXPERIMENTS.md §Perf-3).
     dispatch_backend: str = "sort"
+    # "dropless" on a meshed expert grid: move exact ragged token segments
+    # over every dispatch hop (repro.sharding.comm.ragged_all_to_all) instead
+    # of capacity-padded All2All buffers — zero-pad AND zero-drop end-to-end.
+    # False restores the fixed-shape capacity hop + on-arrival re-compaction
+    # (the pre-ragged behavior, kept for A/B).  Ignored by the capacity
+    # backends ("sort"/"dense"), which always ship capacity buffers.
+    ragged_a2a: bool = True
 
 
 @dataclass(frozen=True)

@@ -53,9 +53,12 @@ def get_reduced(name: str) -> ModelConfig:
     return m.REDUCED
 
 
-def with_dispatch_backend(cfg: ModelConfig, backend: str) -> ModelConfig:
+def with_dispatch_backend(cfg: ModelConfig, backend: str,
+                          ragged_a2a: bool | None = None) -> ModelConfig:
     """Rebuild ``cfg`` with the MoE dispatch backend swapped ("sort",
-    "dense", or "dropless"); no-op for dense architectures."""
+    "dense", or "dropless"); no-op for dense architectures.  ``ragged_a2a``
+    (dropless only) selects ragged vs capacity-padded All2All hops; None
+    keeps the config's current setting."""
     import dataclasses
 
     from repro.core.dispatch import BACKENDS
@@ -64,8 +67,10 @@ def with_dispatch_backend(cfg: ModelConfig, backend: str) -> ModelConfig:
                          f"expected one of {BACKENDS}")
     if cfg.moe is None:
         return cfg
-    return cfg.replace(moe=dataclasses.replace(cfg.moe,
-                                               dispatch_backend=backend))
+    kw = {"dispatch_backend": backend}
+    if ragged_a2a is not None:
+        kw["ragged_a2a"] = ragged_a2a
+    return cfg.replace(moe=dataclasses.replace(cfg.moe, **kw))
 
 
 def config_for_shape(name: str, shape: InputShape) -> ModelConfig:

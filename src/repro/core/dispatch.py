@@ -45,9 +45,14 @@ SMILE level 1) into a ``(num_groups, cap)`` buffer using the same state.
   drops) of capacity buffers.  Because the layout is data-independent in
   *shape* (only the segment boundaries move), it stays jittable; the ragged
   grouped-matmul kernel (:mod:`repro.kernels.grouped_ffn`) scalar-prefetches
-  the per-tile group ids derived from ``group_starts``.  Capacity buffers
-  remain the right tool where a fixed-shape All2All payload is required
-  (the inter-node hop); see :mod:`repro.core.moe` for how the two compose.
+  the per-tile group ids derived from ``group_starts``.  On meshed hops the
+  layout goes straight onto the wire: :func:`ragged_send_counts` reads
+  per-destination-rank segment extents off ``group_starts`` (rank-major
+  group order), :func:`ragged_seg_lens` supplies the raw per-group counts a
+  receiver needs, and :func:`ragged_recv_layout` rebuilds a received slab's
+  per-row (group, validity) structure from those counts alone — no
+  intermediate capacity scatter anywhere (see
+  :func:`repro.sharding.comm.ragged_all_to_all` for the exchange itself).
 """
 from __future__ import annotations
 
@@ -262,6 +267,81 @@ def ragged_positions(group_ids: jax.Array, valid: jax.Array,
         jnp.where(valid_s, arow, -1))
     row_src = jnp.full((R,), -1, jnp.int32).at[arow].set(order, mode="drop")
     return rank, group_starts, row_src
+
+
+def ragged_seg_lens(group_ids: jax.Array, valid: jax.Array,
+                    num_groups: int) -> jax.Array:
+    """Exact per-group valid-assignment counts: (num_groups,) int32.
+
+    The raw (un-aligned) segment lengths of the ragged layout — the numbers a
+    ragged All2All hop exchanges so the receiver can tell real rows from
+    tile-alignment padding (no intermediate capacity scatter needed).
+    """
+    if group_ids.shape[0] == 0:
+        return jnp.zeros((num_groups,), jnp.int32)
+    return jnp.zeros((num_groups,), jnp.int32).at[group_ids].add(
+        valid.astype(jnp.int32), mode="drop")
+
+
+def ragged_send_counts(group_starts: jax.Array,
+                       groups_per_rank: int) -> jax.Array:
+    """Per-destination-rank aligned row counts of a rank-major ragged layout.
+
+    When the layout's groups are ordered rank-major (all of rank 0's groups,
+    then rank 1's, ...), rank ``p``'s wire segment is the contiguous row range
+    ``[group_starts[p*gpr], group_starts[(p+1)*gpr])`` — tile-aligned, so the
+    only padding on the wire is the bounded alignment slack.  Returns (P,)
+    int32 counts straight off the (P*gpr + 1,) offsets.
+    """
+    b = group_starts[::groups_per_rank]                       # (P + 1,)
+    return (b[1:] - b[:-1]).astype(jnp.int32)
+
+
+def ragged_row_membership(starts: jax.Array, counts: jax.Array,
+                          n_rows: int
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Map each row of a concatenated-segments layout to its segment.
+
+    ``starts``: (S+1,) ascending segment start offsets — segment ``s`` spans
+    rows ``[starts[s], starts[s+1])`` and its first ``counts[s]`` rows are
+    occupied (``counts[s] <= starts[s+1] - starts[s]``).  Returns
+    ``(seg, within, valid)`` over ``(n_rows,)``: the owning segment (clamped
+    on the tail), the offset within it, and whether the row is occupied.
+    The single source of truth for counts-to-row reconstruction — used both
+    by :func:`ragged_recv_layout` (per-group segments) and the emulated
+    compaction inside :func:`repro.sharding.comm.ragged_all_to_all`
+    (per-source segments).
+    """
+    S = counts.shape[0]
+    ar = jnp.arange(n_rows, dtype=jnp.int32)
+    seg = jnp.clip(jnp.searchsorted(starts, ar, side="right")
+                   .astype(jnp.int32) - 1, 0, S - 1)
+    within = ar - jnp.take(starts, seg)
+    valid = within < jnp.take(counts, seg)
+    return seg, within, valid
+
+
+def ragged_recv_layout(len_grid: jax.Array, block: int, recv_rows: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Rebuild the structure of a received ragged slab from exchanged counts.
+
+    ``len_grid``: (P, n_local) int32 — raw (valid-row) segment length per
+    (source rank, my local group); the received slab concatenates, source-
+    major, each source's ``n_local`` tile-aligned segments exactly as its
+    ``ragged_positions`` laid them out (``block`` must match the sender's row
+    tile).  Returns ``(gid, valid)`` over the (recv_rows,) slab: the local
+    group id owning each row (clamped on the unused tail) and whether the row
+    is a real assignment (False on alignment padding and the tail) — enough
+    to re-compact with :func:`dispatch_ragged` without any capacity buffer.
+    """
+    P, nl = len_grid.shape
+    aligned = ((len_grid + block - 1) // block) * block
+    starts = jnp.concatenate([
+        jnp.zeros((1,), jnp.int32),
+        jnp.cumsum(aligned.reshape(-1)).astype(jnp.int32)])   # (P*nl + 1,)
+    seg, _, valid = ragged_row_membership(starts, len_grid.reshape(-1),
+                                          recv_rows)
+    return seg % nl, valid
 
 
 def ragged_tile_gids(group_starts: jax.Array, n_tiles: int,

@@ -36,16 +36,26 @@ subsystem in :mod:`repro.core.dispatch`, selected by
   :mod:`repro.kernels.moe_dispatch` (``use_kernel=True``).
 * ``"dense"`` — the O(tokens x groups) one-hot/cumsum oracle, kept for
   verification and as the equivalence reference in tests.
-* ``"dropless"`` — capacity-free expert compute: tokens are compacted into
-  the tile-aligned ragged layout of :func:`repro.core.dispatch.dispatch_ragged`
-  and the expert FFN runs over *exact* per-group segment lengths through the
-  ragged grouped-matmul kernel (:mod:`repro.kernels.grouped_ffn`) — zero
-  capacity padding and zero token drops wherever the expert grid is local.
-  Capacity buffers are kept only where a fixed-shape All2All payload is
-  genuinely required (the collective hops of a multi-device grid); there the
-  received buffer is re-compacted per local group before the FFN, so the
-  MXU still never touches padding (the ragged-A2A follow-up in ROADMAP.md
-  would remove the remaining hop padding too).
+* ``"dropless"`` — capacity-free expert compute AND capacity-free wire:
+  tokens are compacted into the tile-aligned ragged layout of
+  :func:`repro.core.dispatch.dispatch_ragged` and the expert FFN runs over
+  *exact* per-group segment lengths through the ragged grouped-matmul
+  kernel (:mod:`repro.kernels.grouped_ffn`).  On a meshed expert grid every
+  dispatch hop — switch's one flat All2All and both SMILE levels — moves
+  exact tile-aligned token segments through
+  :func:`repro.sharding.comm.ragged_all_to_all` (a tiny count All2All, then
+  segment movement; ``cfg.ragged_a2a``, on by default): the layout's groups
+  are relabeled *rank-major* so each destination rank's wire segment is one
+  contiguous row range, the receiver rebuilds per-row (group, validity)
+  structure from the exchanged count grid alone, re-compacts, and the
+  reverse hop returns exact segments to their origin offsets.  Zero
+  capacity padding anywhere — wire or MXU — and **zero token drops
+  end-to-end** (``drop_frac`` is the exact constant 0.0; the static
+  receive bound absorbs any routing skew — note that bound is the worst
+  case ``n_ranks * R`` and inflates post-hop row counts accordingly, see
+  :func:`_ragged_hop`).  ``ragged_a2a=False`` restores the fixed-shape
+  capacity hop + on-arrival re-compaction for A/B comparison
+  (EXPERIMENTS.md §Perf-4 quantifies the wire-byte reduction).
 
 Both routing schedules run every dispatch hop (one for switch, two per
 direction for SMILE) through the same interface, so a backend improvement
@@ -184,29 +194,45 @@ def experts_ffn_ragged(w: Dict[str, jax.Array], rows: jax.Array,
     return y.reshape(R, d)
 
 
+def experts_ffn_compact_rows(w: Dict[str, jax.Array], rows: jax.Array,
+                             gid: jax.Array, valid: jax.Array,
+                             num_groups: int, act: str,
+                             use_kernel: bool = False) -> jax.Array:
+    """Dropless expert compute over *received* rows with per-row group ids.
+
+    ``rows``: (S, d) arrived slab (any layout); ``gid``/``valid``: (S,) local
+    group id and real-row flag per slab row.  Compacts the valid rows into
+    the tile-aligned ragged layout, runs the FFN over exact segment lengths,
+    and scatters results back to the slab layout (invalid rows stay zero) —
+    the MXU never touches padding regardless of how the slab arrived.
+    """
+    ones = jnp.ones((rows.shape[0],), jnp.float32)
+    r2, starts, st = D.dispatch_ragged(rows, gid, ones, num_groups, k=1,
+                                       valid=valid, use_kernel=use_kernel)
+    out = experts_ffn_ragged(w, r2, starts, act, block=st.cap,
+                             use_kernel=use_kernel)
+    return D.combine(out, st)
+
+
 def experts_ffn_compact(w: Dict[str, jax.Array], recv: jax.Array,
                         valid: jax.Array, act: str,
                         use_kernel: bool = False) -> jax.Array:
     """Dropless expert compute over a *received* capacity buffer.
 
-    When a fixed-shape All2All hop is unavoidable, the received
-    ``(G, S, d)`` buffer still carries ``(cf - 1)/cf`` padding rows.  This
-    compacts the valid rows (``valid``: (G, S) bool) into the ragged layout,
-    runs the FFN over exact segment lengths, and scatters results back to
-    the fixed slot layout (empty slots stay zero, matching what the padded
-    FFN would have produced) — the MegaScale-MoE "no padding into the FFN"
-    hot-path fix with the collective left untouched.
+    When a fixed-shape All2All hop is kept (``ragged_a2a=False``), the
+    received ``(G, S, d)`` buffer still carries ``(cf - 1)/cf`` padding rows.
+    This compacts the valid rows (``valid``: (G, S) bool) into the ragged
+    layout, runs the FFN over exact segment lengths, and scatters results
+    back to the fixed slot layout (empty slots stay zero, matching what the
+    padded FFN would have produced) — the MegaScale-MoE "no padding into the
+    FFN" hot-path fix with the collective left untouched.
     """
     G, S, d = recv.shape
-    flat = recv.reshape(G * S, d)
     rgid = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
-    ones = jnp.ones((G * S,), jnp.float32)
-    rows, starts, st = D.dispatch_ragged(flat, rgid, ones, G, k=1,
-                                         valid=valid.reshape(-1),
-                                         use_kernel=use_kernel)
-    out = experts_ffn_ragged(w, rows, starts, act, block=st.cap,
-                             use_kernel=use_kernel)
-    return D.combine(out, st).reshape(G, S, d)
+    out = experts_ffn_compact_rows(w, recv.reshape(G * S, d), rgid,
+                                   valid.reshape(-1), G, act,
+                                   use_kernel=use_kernel)
+    return out.reshape(G, S, d)
 
 
 # =============================================================================
@@ -227,6 +253,52 @@ def _fold_a2a(buf: jax.Array, groups: int, mesh_axes, mesh_size: int) -> jax.Arr
     buf = buf.reshape((mesh_size, b) + rest)
     buf = comm.all_to_all(buf, mesh_axes, split_axis=0, concat_axis=0)
     return buf.reshape((mesh_size * b,) + rest)
+
+
+def _ragged_hop(rows: jax.Array, group_starts: jax.Array,
+                seg_lens: jax.Array, n_ranks: int, axes, block: int):
+    """Forward ragged All2All of one dispatch hop — zero capacity padding.
+
+    ``rows``: (R, d) *rank-major* ragged layout (groups ordered so that each
+    destination rank's groups are contiguous); ``group_starts``: its
+    (n_ranks*n_local + 1,) aligned offsets; ``seg_lens``: the raw per-group
+    valid counts.  Exchanges exact tile-aligned segments plus the tiny count
+    grid, and rebuilds the received slab's per-row structure from the counts
+    alone — no intermediate capacity scatter anywhere.
+
+    Returns ``(recv, gid, valid, recv_counts, send_counts)``: ``recv``
+    (n_ranks*R, d) source-major received slab; ``gid``/``valid`` per slab
+    row (local group id, real-row flag); ``recv_counts`` (n_ranks,) aligned
+    per-source rows — exactly the ``send_counts`` of the mirrored reverse
+    hop, whose ``recv_counts`` are in turn this hop's ``send_counts`` (so
+    the reverse needs no count exchange at all).  Identity when ``axes`` is
+    empty.
+
+    The received slab is sized ``n_ranks * R`` — the static worst case
+    (every rank routes everything here), which is what guarantees zero
+    drops under ANY skew.  That bound is a real cost on every backend,
+    native op included: post-hop compute that scans the slab (the level-2
+    router on SMILE arrivals, the re-compaction sort, the recompacted FFN's
+    row bound) runs over ``~n_ranks/cf x`` more rows than the padded path's
+    capacity-bounded buffer, partially offsetting the wire win when those
+    stages aren't collective-dominated.  ROADMAP's "ragged receive-bound
+    factor" follow-up (bound = factor x expected arrivals, clamp-drops
+    reported) is the production-shaped trade.
+    """
+    n_local = seg_lens.shape[0] // n_ranks
+    send_counts = D.ragged_send_counts(group_starts, n_local)
+    # one count collective per hop: the (n_ranks, n_local) length grid also
+    # determines the aligned per-source segment extents, so the segment
+    # exchange skips its own count round trip
+    len_grid = comm.all_to_all(seg_lens.reshape(n_ranks, n_local), axes,
+                               split_axis=0, concat_axis=0)
+    recv_counts = (((len_grid + block - 1) // block) * block).sum(
+        axis=1).astype(jnp.int32)
+    recv, _ = comm.ragged_all_to_all(
+        rows, send_counts, axes, recv_rows=n_ranks * rows.shape[0],
+        recv_counts=recv_counts)
+    gid, valid = D.ragged_recv_layout(len_grid, block, recv.shape[0])
+    return recv, gid, valid, recv_counts, send_counts
 
 
 # =============================================================================
@@ -339,6 +411,32 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         out_rows = experts_ffn_ragged(wsel, rows, starts, act,
                                       block=dstate.cap, use_kernel=use_kernel)
         y = D.combine(out_rows, dstate)
+    elif dropless and cfg.ragged_a2a:
+        # ---- meshed + capacity-free: ragged All2All on the wire -------------
+        # relabel groups rank-major (joint rank over plan.ep_axes is
+        # inter-major, matching the capacity fold) so each rank's wire
+        # segment is one contiguous tile-aligned row range
+        m_mesh = max(plan.n_intra, 1)
+        b_mh = layout.virtual_per_node // m_mesh
+        rank = (node // b_n) * m_mesh + v_in_node // b_mh
+        local_g = (node % b_n) * b_mh + v_in_node % b_mh
+        g_sorted = rank * (b_n * b_mh) + local_g
+        rows, starts, dstate = D.dispatch_ragged(x, g_sorted,
+                                                 gates.reshape(-1), V, k=k,
+                                                 use_kernel=use_kernel)
+        keep = dstate.keep                                  # == all True
+        seg_lens = D.ragged_seg_lens(g_sorted, keep, V)
+        recv, rgid, rvalid, rcounts, scounts = _ragged_hop(
+            rows, starts, seg_lens, nm_mesh, plan.ep_axes, dstate.cap)
+        wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
+                                            b_n, b_m)
+        out_slab = experts_ffn_compact_rows(wsel, recv, rgid, rvalid,
+                                            n_groups, act, use_kernel)
+        back, _ = comm.ragged_all_to_all(out_slab, rcounts, plan.ep_axes,
+                                         recv_rows=rows.shape[0],
+                                         seg_rows=rows.shape[0],
+                                         recv_counts=scounts)
+        y = D.combine(back, dstate)
     else:
         # capacity buffers only where the fixed-shape All2All payload needs
         # them; dropless runs the hop on the sort backend's mechanics
@@ -393,9 +491,15 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     f, p = lb_loss_terms(probs, top1, jnp.ones((t,), bool), E, sync)
     lb = scaled_lb_loss(f, p, cfg.lb_alpha)
     zl = z_loss(logits, jnp.ones((t,), bool), cfg.router_z_coef, sync)
-    dropped = comm.psum((~keep).sum().astype(jnp.float32), sync)
-    total = comm.psum(jnp.float32(A), sync)
-    return y, MoEStats(lb, zl, dropped / jnp.maximum(total, 1))
+    if dropless and (nm_mesh == 1 or cfg.ragged_a2a):
+        # no capacity buffer anywhere on this path: nothing CAN drop, so the
+        # diagnostic is the exact constant 0.0 (not a psum over keep masks)
+        drop_frac = jnp.float32(0.0)
+    else:
+        dropped = comm.psum((~keep).sum().astype(jnp.float32), sync)
+        total = comm.psum(jnp.float32(A), sync)
+        drop_frac = dropped / jnp.maximum(total, 1)
+    return y, MoEStats(lb, zl, drop_frac)
 
 
 # =============================================================================
@@ -420,38 +524,54 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     k_local = max(1, cfg.top_k // top_g)
     sync = _sync_axes(plan)
     dropless = cfg.dispatch_backend == "dropless"
-    # level 1 feeds the inter-node All2All — a fixed-shape payload is
-    # genuinely required there, so dropless keeps the capacity buffer for
-    # this hop (on the sort backend's mechanics) and goes capacity-free at
-    # the level-2 expert compute below
+    ragged = dropless and cfg.ragged_a2a
+    # without ragged A2A, dropless keeps a capacity buffer for each
+    # fixed-shape hop (on the sort backend's mechanics) and goes
+    # capacity-free only at the expert compute
     hop_backend = "sort" if dropless else cfg.dispatch_backend
+    n_mesh = max(plan.n_inter, 1)
+    b_n = n_g // n_mesh
 
     # ---------------- level 1: route to node --------------------------------
     p_probs, p_logits = router_probs(x, params["router_inter"]["w"])  # (t, n)
     p_gates, nidx = topk_gates(p_probs, top_g, renorm)
     n1 = nidx.reshape(-1)                                             # (A1,)
     A1 = n1.shape[0]
-    cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
-    buf1, st1 = D.dispatch(x, n1, p_gates.reshape(-1), n_g, cap1,
-                           k=top_g, backend=hop_backend,
-                           use_kernel=use_kernel)                     # (n_g,C1,d)
-    keep1 = st1.keep
-    vflag = D.dispatch_flags(jnp.ones((A1,), jnp.float32), st1)       # (n_g,C1)
+    if ragged:
+        # ragged inter-node hop: node ids are already rank-major (rank =
+        # node // b_n), so the layout's segments map straight onto the wire
+        rows1, starts1, st1 = D.dispatch_ragged(x, n1, p_gates.reshape(-1),
+                                                n_g, k=top_g,
+                                                use_kernel=use_kernel)
+        keep1 = st1.keep                                    # == all True
+        lens1 = D.ragged_seg_lens(n1, keep1, n_g)
+        recv1, node_row, valid1, rc1, sc1 = _ragged_hop(
+            rows1, starts1, lens1, n_mesh, plan.ep_inter, st1.cap)
+        x1 = recv1                                          # (t1, d) slab
+        t1 = x1.shape[0]
+    else:
+        cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
+        buf1, st1 = D.dispatch(x, n1, p_gates.reshape(-1), n_g, cap1,
+                               k=top_g, backend=hop_backend,
+                               use_kernel=use_kernel)                 # (n_g,C1,d)
+        keep1 = st1.keep
+        vflag = D.dispatch_flags(jnp.ones((A1,), jnp.float32), st1)   # (n_g,C1)
 
-    n_mesh = max(plan.n_inter, 1)
-    b_n = n_g // n_mesh
-    recv1 = _fold_a2a(buf1, n_g, plan.ep_inter, n_mesh)
-    rflag = _fold_a2a(vflag, n_g, plan.ep_inter, n_mesh)
-    # received order: (src_rank, my_local_node, C1) -> group by my node
-    recv1 = recv1.reshape(n_mesh, b_n, cap1, d).transpose(1, 0, 2, 3)
-    recv1 = recv1.reshape(b_n, n_mesh * cap1, d)
-    rflag = rflag.reshape(n_mesh, b_n, cap1).transpose(1, 0, 2)
-    rflag = rflag.reshape(b_n, n_mesh * cap1)
+        recv1 = _fold_a2a(buf1, n_g, plan.ep_inter, n_mesh)
+        rflag = _fold_a2a(vflag, n_g, plan.ep_inter, n_mesh)
+        # received order: (src_rank, my_local_node, C1) -> group by my node
+        recv1 = recv1.reshape(n_mesh, b_n, cap1, d).transpose(1, 0, 2, 3)
+        recv1 = recv1.reshape(b_n, n_mesh * cap1, d)
+        rflag = rflag.reshape(n_mesh, b_n, cap1).transpose(1, 0, 2)
+        rflag = rflag.reshape(b_n, n_mesh * cap1)
+
+        t1 = b_n * n_mesh * cap1                              # arrived tokens
+        x1 = recv1.reshape(t1, d)
+        valid1 = rflag.reshape(t1) > 0
+        node_row = jnp.repeat(jnp.arange(b_n, dtype=jnp.int32),
+                              n_mesh * cap1)
 
     # ---------------- level 2: route within node ----------------------------
-    t1 = b_n * n_mesh * cap1                                  # arrived tokens
-    x1 = recv1.reshape(t1, d)
-    valid1 = rflag.reshape(t1) > 0
     q_probs, q_logits = router_probs(x1, params["router_intra"]["w"])  # (t1,e_pn)
     q_gates, qidx = topk_gates(q_probs, k_local, renorm)
     q1 = qidx.reshape(-1)                                             # (A2,)
@@ -464,7 +584,7 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     else:
         v_in_node = q1
     # per-node virtual groups, node-major so the intra A2A folds per node
-    node_of = jnp.repeat(jnp.arange(b_n), n_mesh * cap1 * k_local)
+    node_of = (jnp.repeat(node_row, k_local) if k_local > 1 else node_row)
     v2 = node_of * layout.virtual_per_node + v_in_node
     V2 = b_n * layout.virtual_per_node
     m_mesh = max(plan.n_intra, 1)
@@ -485,6 +605,26 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         out_rows = experts_ffn_ragged(wsel, rows2, starts2, act,
                                       block=st2.cap, use_kernel=use_kernel)
         y1 = D.combine(out_rows, st2)                          # (t1, d)
+    elif ragged:
+        # ---------------- level 2, meshed + ragged hop ------------------------
+        # relabel the per-node virtual groups intra-rank-major so each intra
+        # rank's wire segment is contiguous; no (V2, C2, d) buffer anywhere
+        g2 = ((v_in_node // b_mh) * (b_n * b_mh)
+              + node_of * b_mh + v_in_node % b_mh)
+        rows2, starts2, st2 = D.dispatch_ragged(x1, g2, q_gates.reshape(-1),
+                                                V2, k=k_local, valid=validA,
+                                                use_kernel=use_kernel)
+        keep2 = st2.keep                                    # == validA
+        lens2 = D.ragged_seg_lens(g2, validA, V2)
+        recv2, gid2, rvalid2, rc2, sc2 = _ragged_hop(
+            rows2, starts2, lens2, m_mesh, plan.ep_intra, st2.cap)
+        out_slab = experts_ffn_compact_rows(wsel, recv2, gid2, rvalid2,
+                                            n_groups, act, use_kernel)
+        back2, _ = comm.ragged_all_to_all(out_slab, rc2, plan.ep_intra,
+                                          recv_rows=rows2.shape[0],
+                                          seg_rows=rows2.shape[0],
+                                          recv_counts=sc2)
+        y1 = D.combine(back2, st2)                             # (t1, d)
     else:
         if cfg.tight_level2_capacity:
             # beyond-paper: the level-1 buffer is ~cap-factor x larger than
@@ -537,10 +677,17 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         y1 = D.combine(back2, st2)                             # (t1, d)
 
     # ---------------- reverse level 1 ----------------------------------------
-    y1 = y1.reshape(b_n, n_mesh, cap1, d).transpose(1, 0, 2, 3)
-    y1 = y1.reshape(n_g, cap1, d)
-    back1 = _fold_a2a(y1, n_g, plan.ep_inter, n_mesh)          # (n_g, C1, d)
-    y = D.combine(back1, st1)
+    if ragged:
+        back1, _ = comm.ragged_all_to_all(y1, rc1, plan.ep_inter,
+                                          recv_rows=rows1.shape[0],
+                                          seg_rows=rows1.shape[0],
+                                          recv_counts=sc1)
+        y = D.combine(back1, st1)
+    else:
+        y1 = y1.reshape(b_n, n_mesh, cap1, d).transpose(1, 0, 2, 3)
+        y1 = y1.reshape(n_g, cap1, d)
+        back1 = _fold_a2a(y1, n_g, plan.ep_inter, n_mesh)      # (n_g, C1, d)
+        y = D.combine(back1, st1)
 
     # ---------------- additive LB loss (Eq. 4) -------------------------------
     f_i, P_i = lb_loss_terms(p_probs, nidx[:, 0], jnp.ones((t,), bool),
@@ -555,14 +702,24 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     # then summed (levels compound).  Normalizing level-2 drops by the
     # level-1 count (the old math) mis-scaled the stat whenever the counts
     # differ — e.g. top_k > top_g makes A2's valid count ~k_local x A1, so
-    # level-2 drops were over-weighted by that factor.
-    dropped1 = comm.psum((~keep1).sum().astype(jnp.float32), sync)
-    total1 = comm.psum(jnp.float32(A1), sync)
-    dropped2 = comm.psum((validA & ~keep2).sum().astype(jnp.float32), sync2)
-    total2 = comm.psum(validA.sum().astype(jnp.float32), sync2)
-    drop_frac = (dropped1 / jnp.maximum(total1, 1)
-                 + dropped2 / jnp.maximum(total2, 1))
-    return y, MoEStats(lb_inter + lb_intra, zl, drop_frac)
+    # level-2 drops were over-weighted by that factor.  A level that ran
+    # capacity-free reports the exact constant 0.0 — there is no capacity
+    # buffer on it, so nothing CAN drop and no keep-mask psum is issued.
+    zero = jnp.float32(0.0)
+    if ragged:
+        df1 = zero
+    else:
+        dropped1 = comm.psum((~keep1).sum().astype(jnp.float32), sync)
+        total1 = comm.psum(jnp.float32(A1), sync)
+        df1 = dropped1 / jnp.maximum(total1, 1)
+    if ragged or (dropless and m_mesh == 1):
+        df2 = zero
+    else:
+        dropped2 = comm.psum((validA & ~keep2).sum().astype(jnp.float32),
+                             sync2)
+        total2 = comm.psum(validA.sum().astype(jnp.float32), sync2)
+        df2 = dropped2 / jnp.maximum(total2, 1)
+    return y, MoEStats(lb_inter + lb_intra, zl, df1 + df2)
 
 
 # =============================================================================

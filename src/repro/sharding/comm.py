@@ -110,6 +110,156 @@ def ppermute(x, axes: Axes, perm):
     return lax.ppermute(x, axes, perm=perm)
 
 
+# ------------------------------------------------------------- ragged All2All
+def _excl_cumsum(c: jax.Array) -> jax.Array:
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                            jnp.cumsum(c).astype(jnp.int32)])[:-1]
+
+
+def exchange_counts(send_counts: jax.Array, axes: Axes) -> jax.Array:
+    """Tiny int32 All2All: tell every peer how many rows it will receive.
+
+    ``send_counts``: (P,) — entry ``p`` is how many rows this device sends to
+    joint rank ``p`` of ``axes``.  Returns (P,) where entry ``p`` is how many
+    rows rank ``p`` sends to *this* device.  Identity when the group is 1.
+    """
+    naxes = _norm(axes)
+    P = send_counts.shape[0]
+    if not naxes or P == 1:
+        return send_counts
+    return lax.all_to_all(send_counts.reshape(P, 1), naxes, split_axis=0,
+                          concat_axis=0).reshape(P)
+
+
+def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
+                      *, recv_rows: int, seg_rows: Optional[int] = None,
+                      recv_counts: Optional[jax.Array] = None,
+                      emulation: str = "auto"
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """All2All of *exact* per-peer row segments — no capacity padding on the
+    wire (the SMILE bottleneck fix MegaScale-MoE ships in production).
+
+    ``rows``: (R, ...) staging buffer holding, contiguously and in rank order,
+    the segment destined for each of the P joint ranks of ``axes``: peer ``p``'s
+    segment occupies rows ``[off[p], off[p] + send_counts[p])`` where ``off``
+    is the exclusive cumsum of ``send_counts`` (P,).  ``recv_rows`` is the
+    static bound of the received layout (callers pass ``P * R``: every source
+    can send at most its whole staging buffer).  ``seg_rows`` optionally
+    tightens the static bound on any SINGLE per-peer segment (default: all
+    of ``rows``) — the reverse of a hop passes the forward layout's row
+    count, since no returning segment can exceed what was originally sent;
+    without it the emulations would stage ``P x recv_rows`` slabs.
+    ``recv_counts`` skips the count exchange when the caller already knows
+    the per-source segment lengths (e.g. derived from a counts grid it
+    exchanged anyway, or the mirrored counts of a forward hop).
+
+    Returns ``(recv, recv_counts)``: ``recv`` (recv_rows, ...) holds source
+    ``p``'s segment at the exclusive cumsum of ``recv_counts`` (source-major),
+    zero elsewhere; ``recv_counts`` (P,) is the per-source segment length.
+    Calling again with ``send_counts=recv_counts`` and ``recv_rows=R`` routes
+    each segment back to its origin at the original offsets — the reverse hop.
+
+    Three wire strategies behind the same contract, picked by ``emulation``:
+
+    * ``"auto"`` + ``lax.ragged_all_to_all`` available (jax >= 0.4.38) —
+      the native op; exact segment bytes move.
+    * ``"auto"``/``"a2a"`` otherwise — the P rotation rounds fused into ONE
+      ``lax.all_to_all`` of the ``(P, R)`` staging slab (entry ``p`` is the
+      buffer rolled so peer ``p``'s segment starts at row 0), followed by a
+      single count-driven compaction gather.  Ships ``P * R`` rows but as
+      one fused collective — the fast emulation.
+    * ``"ppermute"`` — P-1 explicit rotation rounds: round ``s`` sends each
+      rank's segment for peer ``rank+s``, validity carried by the exchanged
+      counts.  Same bytes as ``"a2a"`` spread over P-1 neighbor rounds — the
+      schedule a ring fabric (or a future Pallas remote-DMA kernel) wants,
+      kept selectable and tested; slower under CPU emulation.
+
+    Identity when the group size is 1 (``recv = rows`` zero-padded to
+    ``recv_rows``).
+
+    The ``REPRO_RAGGED_A2A_EMULATION`` environment variable overrides an
+    ``"auto"`` selection (values: ``auto``/``a2a``/``ppermute``) — the
+    recoverable escape hatch if a future jax's native op misbehaves (it is
+    auto-selected the moment the installed jax provides it, which no CI
+    here can exercise): forcing an oracle-verified emulation keeps the wire
+    semantics instead of falling all the way back to padded capacity hops.
+    """
+    import os
+    if emulation == "auto":
+        emulation = os.environ.get("REPRO_RAGGED_A2A_EMULATION", "auto")
+    naxes = _norm(axes)
+    P = send_counts.shape[0]
+    rest = rows.shape[1:]
+    if not naxes or P == 1:
+        out = jnp.zeros((recv_rows,) + rest, rows.dtype)
+        n = min(recv_rows, rows.shape[0])
+        out = out.at[:n].set(rows[:n])
+        return out, send_counts
+    send_off = _excl_cumsum(send_counts)
+    if emulation == "auto" and hasattr(lax, "ragged_all_to_all"):
+        # native path: my segment for peer p lands on p at the offset where
+        # p expects MY slice — sum over sources before me of what they send
+        # to p, i.e. row ``me`` of the source-exclusive cumsum of the full
+        # (src, dst) count matrix (which also supplies recv_counts as
+        # column ``me`` — no separate count exchange)
+        me = lax.axis_index(naxes)
+        m = lax.all_gather(send_counts, naxes, axis=0, tiled=False)  # (P, P)
+        if recv_counts is None:
+            recv_counts = jnp.take(m, me, axis=1)
+        out_off = jnp.take(jnp.cumsum(m, axis=0) - m, me, axis=0)
+        out = jnp.zeros((recv_rows,) + rest, rows.dtype)
+        return lax.ragged_all_to_all(
+            rows, out, send_off.astype(jnp.int32),
+            send_counts.astype(jnp.int32), out_off.astype(jnp.int32),
+            recv_counts.astype(jnp.int32),
+            axis_name=naxes if len(naxes) > 1 else naxes[0]), recv_counts
+    if recv_counts is None:
+        recv_counts = exchange_counts(send_counts, naxes)
+    recv_off = _excl_cumsum(recv_counts)
+    R = rows.shape[0]
+    S = R if seg_rows is None else min(seg_rows, R)
+    ar = jnp.arange(S, dtype=jnp.int32)
+    bshape = (-1,) + (1,) * len(rest)
+    if emulation in ("auto", "a2a"):
+        # fused emulation: staging slab (P, S) with peer p's segment rolled
+        # to row 0 of entry p; one all_to_all; then a single gather compacts
+        # the (src, S)-strided arrivals to the cumsum layout, validity from
+        # the exchanged counts (lazy import: layout math lives with the
+        # dispatch helpers, and comm must stay importable standalone)
+        from repro.core.dispatch import ragged_row_membership
+        idx = (ar[None, :] + send_off[:, None]) % R              # (P, S)
+        staging = jnp.take(rows, idx.reshape(-1), axis=0
+                           ).reshape((P, S) + rest)
+        got = lax.all_to_all(staging, naxes, split_axis=0, concat_axis=0)
+        coff = jnp.concatenate([recv_off,
+                                recv_off[-1:] + recv_counts[-1:]])  # (P+1,)
+        seg, within, valid = ragged_row_membership(coff, recv_counts,
+                                                   recv_rows)
+        src_row = jnp.where(valid, seg * S + within, 0)
+        out = jnp.take(got.reshape((P * S,) + rest), src_row, axis=0)
+        return jnp.where(valid.reshape(bshape), out, 0), recv_counts
+    if emulation != "ppermute":
+        raise ValueError(f"unknown emulation {emulation!r}")
+    # ppermute rounds: rotation round s pairs every rank i with dst i+s and
+    # src i-s (mod P); the slab is the staging buffer rolled so the outgoing
+    # segment starts at row 0, and the receiver keeps the first
+    # recv_counts[src] rows
+    me = lax.axis_index(naxes)
+    out = jnp.zeros((recv_rows,) + rest, rows.dtype)
+    for s in range(P):
+        dst = (me + s) % P
+        src = (me - s) % P
+        slab = jnp.take(rows, (ar + send_off[dst]) % R, axis=0)  # (S, ...)
+        if s:
+            slab = lax.ppermute(slab, naxes,
+                                perm=[(j, (j + s) % P) for j in range(P)])
+        cnt = recv_counts[src]
+        idx = jnp.where(ar < cnt, recv_off[src] + ar, recv_rows)  # OOB = drop
+        out = out.at[idx].add(
+            jnp.where((ar < cnt).reshape(bshape), slab, 0), mode="drop")
+    return out, recv_counts
+
+
 # ---------------------------------------------------------------- token split
 def split_tokens(x, plan_axes: Axes, size: int):
     """Evenly split the leading (token) dim of ``x`` across ``plan_axes``.

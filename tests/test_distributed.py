@@ -27,6 +27,11 @@ def _run(script: str, timeout: int = 900):
     return p.stdout
 
 
+def test_ragged_all_to_all_oracle():
+    out = _run("_ragged_a2a.py")
+    assert "ALL RAGGED A2A OK" in out
+
+
 def test_moe_layer_equivalence():
     out = _run("_moe_equiv.py")
     assert "ALL MOE EQUIV OK" in out
