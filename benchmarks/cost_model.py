@@ -149,6 +149,67 @@ def hop_time_report(tokens: int, k: int, capacity_factor: float, groups: int,
             "ratio": t_pad / t_rag if t_rag else float("inf")}
 
 
+# ------------------------------------------------------------- dispatch sort
+# Modeled cost of the per-hop stable group sort (benchmarks/bench_radix_sort
+# compares these projections against CPU-measured numbers, which carry an
+# interpret-mode caveat for the Pallas path).
+
+# elementwise int/compare ops run on the VPU, roughly an order of magnitude
+# below MXU peak (8x128 lanes x a few ops/cycle vs the systolic array); one
+# shared rough ratio for BOTH sort paths, so their ratio stays structural
+VPU_MXU_RATIO = 32
+
+
+def sort_time_report(n: int, num_keys: int, hw: Hardware,
+                     block: int = 128) -> dict:
+    """Modeled on-accelerator stable sort of ``n`` small-domain keys.
+
+    Both paths are charged their HBM passes plus their elementwise compute
+    at the same VPU rate (``hw.flops / VPU_MXU_RATIO``), term for term
+    against the code that actually ships:
+
+    * ``argsort`` — the packed baseline (``ref.group_sort_ref``): key and
+      arrival index packed into ONE int32, so XLA's comparison sort
+      streams 4 B/element over ~``log2(n)`` sequential merge-style passes,
+      each doing ~2n compare-exchanges.  (When ``num_keys * n >= 2^31``
+      the real fallback widens to a variadic 8 B/element sort; every
+      dispatch-sized cell fits the packed path, so the model charges the
+      cheaper layout and stays conservative.)  A comparison sort cannot
+      exploit the tiny key domain — and XLA's sorting networks are far
+      above this floor in practice, so the modeled ratio is a lower bound.
+    * ``radix`` — the one-pass counting sort of
+      :mod:`repro.kernels.radix_sort`, exactly as written: 5 A-sized
+      streaming int32 transfers (the kernel reads keys and writes the
+      local-rank intermediate; the fused ``ranks = local + starts[keys]``
+      add re-reads both and writes ranks), and per element ``block``
+      pairwise within-tile compares plus two lane-padded domain sweeps
+      (histogram build + rank pick):
+      ``n * (block + 2 * lane_pad(num_keys + 1))`` VPU ops.  The domain
+      sweeps are why the win shrinks as ``num_keys`` grows past a lane
+      width — the kernel targets dispatch's small domains.
+
+    Deliberately simple (no fusion, no cache effects) — the point is the
+    structural O(A log A) vs O(A + E) comparison at dispatch-sized inputs,
+    with the same hardware numbers used by every other report here.
+    """
+    vpu = hw.flops / VPU_MXU_RATIO
+    passes = max(1.0, math.log2(max(n, 2)))
+    argsort_mem_s = passes * 2 * n * 4 / hw.hbm_bw
+    argsort_vpu_s = passes * 2 * n / vpu
+    argsort_s = argsort_mem_s + argsort_vpu_s
+    # the kernel's histogram domain includes its pad sentinel (num_keys + 1
+    # values) before lane padding — charge what it actually sweeps
+    lanes = ((num_keys + 1 + 127) // 128) * 128
+    radix_mem_s = 5 * n * 4 / hw.hbm_bw
+    radix_vpu_s = n * (block + 2 * lanes) / vpu
+    radix_s = radix_mem_s + radix_vpu_s
+    return {"hw": hw.name, "n": n, "num_keys": num_keys,
+            "argsort_s": argsort_s, "radix_s": radix_s,
+            "argsort_mem_s": argsort_mem_s, "argsort_vpu_s": argsort_vpu_s,
+            "radix_mem_s": radix_mem_s, "radix_vpu_s": radix_vpu_s,
+            "speedup": argsort_s / radix_s if radix_s else float("inf")}
+
+
 def allreduce_time(bytes_per_device: float, group: int, bw: float) -> float:
     if group <= 1:
         return 0.0

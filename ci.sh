@@ -1,17 +1,28 @@
 #!/usr/bin/env bash
 # Executable verify recipe (ROADMAP "Tier-1 verify" + benchmark smoke).
 #
-#   ./ci.sh          tier-1 test suite, then the benchmark smoke subset
-#   ./ci.sh --fast   tier-1 test suite only
+#   ./ci.sh                 tier-1 test suite, then the benchmark smoke subset
+#   ./ci.sh --fast          tier-1 test suite only
+#   ./ci.sh --conformance   dispatch conformance matrix only: every
+#                           dispatch_backend x ragged_a2a x sort_impl cell
+#                           vs the dense oracle + the group-sort property
+#                           suite (the targeted gate for dispatch changes)
 #
 # The tier-1 suite is the driver-enforced gate; the smoke step additionally
 # compiles and runs one jitted round trip of every dispatch backend
-# (dense / sort / dropless) so a backend that only breaks under jit is
-# caught here rather than in a 20-minute bench run.
+# (dense / sort / dropless) and both group-sort impls so a backend that
+# only breaks under jit is caught here rather than in a 20-minute bench run.
 set -euo pipefail
 cd "$(dirname "$0")"
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--conformance" ]]; then
+    echo "== dispatch conformance matrix =="
+    python -m pytest -q tests/test_dispatch_conformance.py tests/test_group_sort.py
+    echo "CI OK (conformance)"
+    exit 0
+fi
 
 echo "== repo hygiene =="
 if git ls-files '*.pyc' | grep -q .; then

@@ -48,6 +48,15 @@ class MoEConfig:
     # (the pre-ragged behavior, kept for A/B).  Ignored by the capacity
     # backends ("sort"/"dense"), which always ship capacity buffers.
     ragged_a2a: bool = True
+    # group-sort implementation under every dispatch hop (sort backend's
+    # position assignment, dropless sender layout, ragged receiver
+    # re-compaction): "argsort" = XLA's generic O(A log A) sort (packed
+    # single-operand lax.sort; the default — fastest on this CPU
+    # container), "radix" = the one-pass O(A) Pallas counting sort over the
+    # small group-id domain (repro.kernels.radix_sort — the TPU fast path;
+    # interpret-validated off-TPU).  Bit-identical outputs either way; see
+    # EXPERIMENTS.md §Perf-5 and tests/test_dispatch_conformance.py.
+    sort_impl: str = "argsort"
 
 
 @dataclass(frozen=True)

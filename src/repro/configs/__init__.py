@@ -54,22 +54,30 @@ def get_reduced(name: str) -> ModelConfig:
 
 
 def with_dispatch_backend(cfg: ModelConfig, backend: str,
-                          ragged_a2a: bool | None = None) -> ModelConfig:
+                          ragged_a2a: bool | None = None,
+                          sort_impl: str | None = None) -> ModelConfig:
     """Rebuild ``cfg`` with the MoE dispatch backend swapped ("sort",
     "dense", or "dropless"); no-op for dense architectures.  ``ragged_a2a``
-    (dropless only) selects ragged vs capacity-padded All2All hops; None
-    keeps the config's current setting."""
+    (dropless only) selects ragged vs capacity-padded All2All hops;
+    ``sort_impl`` ("radix" | "argsort") selects the group-sort kernel under
+    every dispatch hop; None keeps the config's current setting."""
     import dataclasses
 
     from repro.core.dispatch import BACKENDS
+    from repro.kernels.ops import SORT_IMPLS
     if backend not in BACKENDS:
         raise ValueError(f"unknown dispatch backend {backend!r}; "
                          f"expected one of {BACKENDS}")
+    if sort_impl is not None and sort_impl not in SORT_IMPLS:
+        raise ValueError(f"unknown sort_impl {sort_impl!r}; "
+                         f"expected one of {SORT_IMPLS}")
     if cfg.moe is None:
         return cfg
     kw = {"dispatch_backend": backend}
     if ragged_a2a is not None:
         kw["ragged_a2a"] = ragged_a2a
+    if sort_impl is not None:
+        kw["sort_impl"] = sort_impl
     return cfg.replace(moe=dataclasses.replace(cfg.moe, **kw))
 
 

@@ -133,8 +133,15 @@ def combine_gather(buf: jax.Array, group_ids: jax.Array, pos: jax.Array,
 # Sort backend primitives
 # =============================================================================
 
+def _group_sort(keys: jax.Array, num_keys: int, sort_impl: str):
+    """Stable small-domain sort via :func:`repro.kernels.ops.group_sort`
+    (lazy import, matching the other kernel touchpoints in this module)."""
+    from repro.kernels import ops as kops
+    return kops.group_sort(keys, num_keys, impl=sort_impl)
+
+
 def sort_positions(group_ids: jax.Array, valid: jax.Array,
-                   num_groups: int, cap: int
+                   num_groups: int, cap: int, *, sort_impl: str = "argsort"
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Within-group positions via a stable sort instead of a dense cumsum.
 
@@ -143,38 +150,32 @@ def sort_positions(group_ids: jax.Array, valid: jax.Array,
     unspecified), plus ``slot_assign`` (num_groups*cap,) int32 — the flat
     assignment index occupying each buffer slot, ``-1`` for empty slots.
     ``slot_assign`` turns the dispatch scatter into a gather.
+
+    The sort itself runs through :func:`repro.kernels.ops.group_sort`
+    (``sort_impl``: ``"radix"`` = one-pass Pallas counting sort,
+    ``"argsort"`` = packed single-operand ``lax.sort``; bit-identical).
+    Given the sorted ``ranks`` and the per-group ``starts`` the counting
+    sort hands back for free, every quantity is computed element-side —
+    ``pos = rank - starts[key]`` — with no scatter back from sorted order.
     """
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
     A = group_ids.shape[0]
     if A == 0:
-        # serving can hand us an empty local batch; the packed-sort fast path
-        # below would divide/modulo by A == 0
+        # serving can hand us an empty local batch; nothing to sort
         return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool),
                 jnp.full((num_groups * cap,), -1, jnp.int32))
     gi = group_ids.astype(jnp.int32)
     # invalid assignments sort after every real group -> never take a slot
     keys = jnp.where(valid, gi, num_groups)
+    ranks, starts = _group_sort(keys, num_groups + 1, sort_impl)
     idx = jnp.arange(A, dtype=jnp.int32)
-    if (num_groups + 1) * A < 2**31:
-        # pack (key, arrival index) into one int32: a single-operand sort is
-        # ~4x faster on CPU than the stable variadic argsort, and the packed
-        # low bits make it order-preserving within each key by construction
-        sp = jax.lax.sort(keys * A + idx)
-        order = sp % A
-        skeys = sp // A
-    else:                                       # int32 packing would overflow
-        order = jnp.argsort(keys, stable=True).astype(jnp.int32)  # (A,)
-        skeys = jnp.take(keys, order)
-    # position within the sorted group run = idx - (first index of the run);
-    # run starts come from a tiny (num_groups+1,) searchsorted, not a scan
-    starts = jnp.searchsorted(
-        skeys, jnp.arange(num_groups + 1, dtype=jnp.int32)).astype(jnp.int32)
-    pos_s = idx - jnp.take(starts, skeys)
-    keep_s = (skeys < num_groups) & (pos_s < cap)
-    pos = jnp.zeros((A,), jnp.int32).at[order].set(pos_s)
-    keep = jnp.zeros((A,), bool).at[order].set(keep_s)
-    dst = jnp.where(keep_s, skeys * cap + pos_s, num_groups * cap)
+    # position within the group run = sorted rank - first rank of the run
+    pos = ranks - jnp.take(starts, keys)
+    keep = valid & (pos < cap)
+    dst = jnp.where(keep, keys * cap + pos, num_groups * cap)
     slot_assign = jnp.full((num_groups * cap,), -1, jnp.int32
-                           ).at[dst].set(order, mode="drop")
+                           ).at[dst].set(idx, mode="drop")
     return pos, keep, slot_assign
 
 
@@ -216,13 +217,16 @@ def ragged_rows(A: int, num_groups: int, block: int) -> int:
 
 
 def ragged_positions(group_ids: jax.Array, valid: jax.Array,
-                     num_groups: int, block: int
+                     num_groups: int, block: int, *,
+                     sort_impl: str = "argsort"
                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Tile-aligned ragged layout: the capacity-free sibling of
     :func:`sort_positions`.
 
-    Assignments are stable-sorted by destination group; group ``g``'s segment
-    is placed starting at ``group_starts[g]`` — always a multiple of
+    Assignments are stable-sorted by destination group (through
+    :func:`repro.kernels.ops.group_sort` — ``sort_impl`` selects the Pallas
+    counting sort vs the argsort oracle, bit-identically); group ``g``'s
+    segment is placed starting at ``group_starts[g]`` — always a multiple of
     ``block`` — and holds exactly its own valid assignments, in arrival
     order.  Nothing is ever dropped.
 
@@ -237,6 +241,8 @@ def ragged_positions(group_ids: jax.Array, valid: jax.Array,
     * ``row_src`` (R,) int32 — assignment id occupying each row, ``-1`` for
       alignment padding / unused tail (R = :func:`ragged_rows`, static).
     """
+    if num_groups < 1:
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
     A = group_ids.shape[0]
     G = num_groups
     R = ragged_rows(A, G, block)
@@ -244,28 +250,23 @@ def ragged_positions(group_ids: jax.Array, valid: jax.Array,
         return (jnp.zeros((0,), jnp.int32), jnp.zeros((G + 1,), jnp.int32),
                 jnp.full((R,), -1, jnp.int32))
     keys = jnp.where(valid, group_ids.astype(jnp.int32), G)
+    ranks, starts = _group_sort(keys, G + 1, sort_impl)
     idx = jnp.arange(A, dtype=jnp.int32)
-    if (G + 1) * A < 2**31:
-        sp = jax.lax.sort(keys * A + idx)         # packed single-operand sort
-        order = (sp % A).astype(jnp.int32)
-        skeys = (sp // A).astype(jnp.int32)
-    else:
-        order = jnp.argsort(keys, stable=True).astype(jnp.int32)
-        skeys = jnp.take(keys, order)
-    # raw segment bounds in sorted order; bounds[G] == number of valid rows
-    bounds = jnp.searchsorted(
-        skeys, jnp.arange(G + 1, dtype=jnp.int32)).astype(jnp.int32)
+    # raw segment bounds: counts of keys < g; bounds[G] == number of valid
+    # rows (the counting sort's prefix array IS the searchsorted result)
+    bounds = starts[:G + 1]
     lens = bounds[1:] - bounds[:-1]                               # (G,)
     aligned = ((lens + block - 1) // block) * block
     group_starts = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(aligned).astype(jnp.int32)])
-    pos_s = idx - jnp.take(bounds, skeys)          # within-segment position
-    valid_s = skeys < G
-    arow = jnp.take(group_starts, jnp.minimum(skeys, G)) + pos_s
-    arow = jnp.where(valid_s, arow, R)             # sentinel: off the layout
-    rank = jnp.zeros((A,), jnp.int32).at[order].set(
-        jnp.where(valid_s, arow, -1))
-    row_src = jnp.full((R,), -1, jnp.int32).at[arow].set(order, mode="drop")
+    # element-side: within-segment position = sorted rank - first rank of
+    # the segment; invalid keys (== G) index bounds[G]/group_starts[G] and
+    # are masked to the sentinels below — no scatter back from sorted order
+    pos_e = ranks - jnp.take(bounds, keys)
+    arow = jnp.take(group_starts, keys) + pos_e
+    arow = jnp.where(valid, arow, R)               # sentinel: off the layout
+    rank = jnp.where(valid, arow, -1)
+    row_src = jnp.full((R,), -1, jnp.int32).at[arow].set(idx, mode="drop")
     return rank, group_starts, row_src
 
 
@@ -398,16 +399,22 @@ jax.tree_util.register_dataclass(
 def dispatch(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
              num_groups: int, cap: int, *, k: int = 1,
              valid: Optional[jax.Array] = None, backend: str = "sort",
-             use_kernel: bool = False
+             use_kernel: bool = False, sort_impl: str = "argsort"
              ) -> Tuple[jax.Array, CombineState]:
     """Place tokens into a (num_groups, cap, d) capacity buffer.
 
     ``x``: (t, d) local tokens; ``group_ids``/``gates``: flat (t*k,)
     per-assignment destination group and combine weight (assignment ``a``
     belongs to token ``a // k``); ``valid``: optional (t*k,) bool — invalid
-    assignments never consume capacity.  Returns the buffer and the opaque
-    state consumed by :func:`combine` / :func:`dispatch_flags`.
+    assignments never consume capacity.  ``sort_impl`` selects the group
+    sort of the sort backend (``MoEConfig.sort_impl``; ignored by dense).
+    Returns the buffer and the opaque state consumed by :func:`combine` /
+    :func:`dispatch_flags`.
     """
+    if num_groups < 1:
+        # hoisted above the backend split so the dense path fails loudly
+        # too instead of producing a shape-0 buffer
+        raise ValueError(f"num_groups must be >= 1, got {num_groups}")
     t, d = x.shape
     A = group_ids.shape[0]
     if A != t * k:
@@ -427,7 +434,8 @@ def dispatch(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
         raise ValueError(f"unknown dispatch backend {backend!r}; "
                          f"expected \"dense\" or \"sort\" (capacity-buffer "
                          f"backends; for \"dropless\" use dispatch_ragged)")
-    pos, keep, slot_assign = sort_positions(group_ids, valid, num_groups, cap)
+    pos, keep, slot_assign = sort_positions(group_ids, valid, num_groups, cap,
+                                            sort_impl=sort_impl)
     state = CombineState(group_ids, pos, keep, gates, slot_assign,
                          num_groups, cap, k, t, backend, use_kernel)
     if t == 0:
@@ -445,16 +453,18 @@ def dispatch(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
 def dispatch_ragged(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
                     num_groups: int, *, k: int = 1,
                     valid: Optional[jax.Array] = None,
-                    block: Optional[int] = None, use_kernel: bool = False
+                    block: Optional[int] = None, use_kernel: bool = False,
+                    sort_impl: str = "argsort"
                     ) -> Tuple[jax.Array, jax.Array, CombineState]:
     """Capacity-free dispatch into the tile-aligned ragged layout.
 
-    Same contract as :func:`dispatch` but with no capacity buffer: returns
-    ``(rows, group_starts, state)`` where ``rows`` is the flat ``(R, d)``
-    gathered array (R static, see :func:`ragged_rows`), ``group_starts`` the
-    ``(num_groups+1,)`` aligned segment offsets consumed by the ragged
-    grouped FFN, and ``state`` feeds :func:`combine` / :func:`dispatch_flags`
-    as usual.  No assignment is ever dropped (``state.keep == valid``).
+    Same contract as :func:`dispatch` (including ``sort_impl``) but with no
+    capacity buffer: returns ``(rows, group_starts, state)`` where ``rows``
+    is the flat ``(R, d)`` gathered array (R static, see
+    :func:`ragged_rows`), ``group_starts`` the ``(num_groups+1,)`` aligned
+    segment offsets consumed by the ragged grouped FFN, and ``state`` feeds
+    :func:`combine` / :func:`dispatch_flags` as usual.  No assignment is
+    ever dropped (``state.keep == valid``).
     """
     t, d = x.shape
     A = group_ids.shape[0]
@@ -464,7 +474,8 @@ def dispatch_ragged(x: jax.Array, group_ids: jax.Array, gates: jax.Array,
         valid = jnp.ones((A,), bool)
     blk = _ragged_block(A, num_groups, block, use_kernel)
     rank, group_starts, row_src = ragged_positions(group_ids, valid,
-                                                   num_groups, blk)
+                                                   num_groups, blk,
+                                                   sort_impl=sort_impl)
     state = CombineState(group_ids, rank, valid, gates, row_src,
                          num_groups, blk, k, t, "dropless", use_kernel)
     R = row_src.shape[0]

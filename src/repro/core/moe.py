@@ -60,6 +60,14 @@ subsystem in :mod:`repro.core.dispatch`, selected by
 Both routing schedules run every dispatch hop (one for switch, two per
 direction for SMILE) through the same interface, so a backend improvement
 lands on all of them at once.
+
+Every hop's stable group sort — the sort backend's position assignment,
+the dropless sender layout, AND the ragged receiver re-compaction — runs
+through :func:`repro.kernels.ops.group_sort`, selected by
+``MoEConfig.sort_impl``: ``"argsort"`` (XLA's generic O(A log A) sort, the
+default here) vs ``"radix"`` (the one-pass O(A) Pallas counting sort of
+:mod:`repro.kernels.radix_sort` — the TPU fast path, bit-identical by
+construction; EXPERIMENTS.md §Perf-5).
 """
 from __future__ import annotations
 
@@ -197,7 +205,8 @@ def experts_ffn_ragged(w: Dict[str, jax.Array], rows: jax.Array,
 def experts_ffn_compact_rows(w: Dict[str, jax.Array], rows: jax.Array,
                              gid: jax.Array, valid: jax.Array,
                              num_groups: int, act: str,
-                             use_kernel: bool = False) -> jax.Array:
+                             use_kernel: bool = False,
+                             sort_impl: str = "argsort") -> jax.Array:
     """Dropless expert compute over *received* rows with per-row group ids.
 
     ``rows``: (S, d) arrived slab (any layout); ``gid``/``valid``: (S,) local
@@ -208,7 +217,8 @@ def experts_ffn_compact_rows(w: Dict[str, jax.Array], rows: jax.Array,
     """
     ones = jnp.ones((rows.shape[0],), jnp.float32)
     r2, starts, st = D.dispatch_ragged(rows, gid, ones, num_groups, k=1,
-                                       valid=valid, use_kernel=use_kernel)
+                                       valid=valid, use_kernel=use_kernel,
+                                       sort_impl=sort_impl)
     out = experts_ffn_ragged(w, r2, starts, act, block=st.cap,
                              use_kernel=use_kernel)
     return D.combine(out, st)
@@ -216,7 +226,8 @@ def experts_ffn_compact_rows(w: Dict[str, jax.Array], rows: jax.Array,
 
 def experts_ffn_compact(w: Dict[str, jax.Array], recv: jax.Array,
                         valid: jax.Array, act: str,
-                        use_kernel: bool = False) -> jax.Array:
+                        use_kernel: bool = False,
+                        sort_impl: str = "argsort") -> jax.Array:
     """Dropless expert compute over a *received* capacity buffer.
 
     When a fixed-shape All2All hop is kept (``ragged_a2a=False``), the
@@ -231,7 +242,8 @@ def experts_ffn_compact(w: Dict[str, jax.Array], recv: jax.Array,
     rgid = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
     out = experts_ffn_compact_rows(w, recv.reshape(G * S, d), rgid,
                                    valid.reshape(-1), G, act,
-                                   use_kernel=use_kernel)
+                                   use_kernel=use_kernel,
+                                   sort_impl=sort_impl)
     return out.reshape(G, S, d)
 
 
@@ -399,12 +411,14 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     b_n = n_g // max(plan.n_inter, 1)
     b_m = m_g // max(plan.n_intra, 1)
     dropless = cfg.dispatch_backend == "dropless"
+    simpl = cfg.sort_impl
 
     if dropless and nm_mesh == 1:
         # ---- fully capacity-free: the whole expert grid is local ------------
         # no (V, cap, d) buffer, no padding into the FFN, zero token drops
         rows, starts, dstate = D.dispatch_ragged(x, v, gates.reshape(-1), V,
-                                                 k=k, use_kernel=use_kernel)
+                                                 k=k, use_kernel=use_kernel,
+                                                 sort_impl=simpl)
         keep = dstate.keep
         wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
                                             b_n, b_m)
@@ -423,7 +437,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         g_sorted = rank * (b_n * b_mh) + local_g
         rows, starts, dstate = D.dispatch_ragged(x, g_sorted,
                                                  gates.reshape(-1), V, k=k,
-                                                 use_kernel=use_kernel)
+                                                 use_kernel=use_kernel,
+                                                 sort_impl=simpl)
         keep = dstate.keep                                  # == all True
         seg_lens = D.ragged_seg_lens(g_sorted, keep, V)
         recv, rgid, rvalid, rcounts, scounts = _ragged_hop(
@@ -431,7 +446,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
                                             b_n, b_m)
         out_slab = experts_ffn_compact_rows(wsel, recv, rgid, rvalid,
-                                            n_groups, act, use_kernel)
+                                            n_groups, act, use_kernel,
+                                            sort_impl=simpl)
         back, _ = comm.ragged_all_to_all(out_slab, rcounts, plan.ep_axes,
                                          recv_rows=rows.shape[0],
                                          seg_rows=rows.shape[0],
@@ -444,7 +460,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         cap = capacity(t, k, cfg.capacity_factor, V)
         buf, dstate = D.dispatch(x, v, gates.reshape(-1), V, cap, k=k,
                                  backend=hop_backend,
-                                 use_kernel=use_kernel)          # (V, cap, d)
+                                 use_kernel=use_kernel,
+                                 sort_impl=simpl)                # (V, cap, d)
         keep = dstate.keep
 
         # ---- single flat All2All over the combined grid --------------------
@@ -470,7 +487,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
             # FFN only sees the valid rows of the received buffer
             slot_valid = D.dispatch_flags(keep.astype(jnp.float32), dstate)
             rvalid = fold(slot_valid) > 0               # (groups, src*cap)
-            out = experts_ffn_compact(wsel, recv, rvalid, act, use_kernel)
+            out = experts_ffn_compact(wsel, recv, rvalid, act, use_kernel,
+                                      sort_impl=simpl)
         else:
             out = experts_ffn(wsel, recv, act, use_kernel)
 
@@ -529,6 +547,7 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     # fixed-shape hop (on the sort backend's mechanics) and goes
     # capacity-free only at the expert compute
     hop_backend = "sort" if dropless else cfg.dispatch_backend
+    simpl = cfg.sort_impl
     n_mesh = max(plan.n_inter, 1)
     b_n = n_g // n_mesh
 
@@ -542,7 +561,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         # node // b_n), so the layout's segments map straight onto the wire
         rows1, starts1, st1 = D.dispatch_ragged(x, n1, p_gates.reshape(-1),
                                                 n_g, k=top_g,
-                                                use_kernel=use_kernel)
+                                                use_kernel=use_kernel,
+                                                sort_impl=simpl)
         keep1 = st1.keep                                    # == all True
         lens1 = D.ragged_seg_lens(n1, keep1, n_g)
         recv1, node_row, valid1, rc1, sc1 = _ragged_hop(
@@ -553,7 +573,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
         buf1, st1 = D.dispatch(x, n1, p_gates.reshape(-1), n_g, cap1,
                                k=top_g, backend=hop_backend,
-                               use_kernel=use_kernel)                 # (n_g,C1,d)
+                               use_kernel=use_kernel,
+                               sort_impl=simpl)                       # (n_g,C1,d)
         keep1 = st1.keep
         vflag = D.dispatch_flags(jnp.ones((A1,), jnp.float32), st1)   # (n_g,C1)
 
@@ -600,7 +621,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         # level-2 capacity drops, FFN over exact per-group segment lengths
         rows2, starts2, st2 = D.dispatch_ragged(x1, v2, q_gates.reshape(-1),
                                                 V2, k=k_local, valid=validA,
-                                                use_kernel=use_kernel)
+                                                use_kernel=use_kernel,
+                                                sort_impl=simpl)
         keep2 = st2.keep
         out_rows = experts_ffn_ragged(wsel, rows2, starts2, act,
                                       block=st2.cap, use_kernel=use_kernel)
@@ -613,13 +635,15 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
               + node_of * b_mh + v_in_node % b_mh)
         rows2, starts2, st2 = D.dispatch_ragged(x1, g2, q_gates.reshape(-1),
                                                 V2, k=k_local, valid=validA,
-                                                use_kernel=use_kernel)
+                                                use_kernel=use_kernel,
+                                                sort_impl=simpl)
         keep2 = st2.keep                                    # == validA
         lens2 = D.ragged_seg_lens(g2, validA, V2)
         recv2, gid2, rvalid2, rc2, sc2 = _ragged_hop(
             rows2, starts2, lens2, m_mesh, plan.ep_intra, st2.cap)
         out_slab = experts_ffn_compact_rows(wsel, recv2, gid2, rvalid2,
-                                            n_groups, act, use_kernel)
+                                            n_groups, act, use_kernel,
+                                            sort_impl=simpl)
         back2, _ = comm.ragged_all_to_all(out_slab, rc2, plan.ep_intra,
                                           recv_rows=rows2.shape[0],
                                           seg_rows=rows2.shape[0],
@@ -642,7 +666,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         buf2, st2 = D.dispatch(x1, v2, q_gates.reshape(-1), V2, cap2,
                                k=k_local, valid=validA,
                                backend=hop_backend,
-                               use_kernel=use_kernel)         # (V2, C2, d)
+                               use_kernel=use_kernel,
+                               sort_impl=simpl)               # (V2, C2, d)
         keep2 = st2.keep
 
         def fold2(z):
@@ -662,7 +687,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
             # fixed-shape intra A2A retained; FFN only sees valid rows
             slot_valid2 = D.dispatch_flags(keep2.astype(jnp.float32), st2)
             rvalid2 = fold2(slot_valid2) > 0                  # (groups, S)
-            out = experts_ffn_compact(wsel, recv2, rvalid2, act, use_kernel)
+            out = experts_ffn_compact(wsel, recv2, rvalid2, act, use_kernel,
+                                      sort_impl=simpl)
         else:
             out = experts_ffn(wsel, recv2, act, use_kernel)
 

@@ -18,12 +18,42 @@ from repro.kernels.grouped_ffn import (grouped_ffn_pallas,
                                        grouped_ffn_ragged_pallas)
 from repro.kernels.moe_dispatch import (combine_gather_pallas,
                                         dispatch_gather_pallas)
+from repro.kernels.radix_sort import group_sort_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# the two stable group-sort implementations behind MoEConfig.sort_impl
+SORT_IMPLS = ("radix", "argsort")
+# below this many rows the O(A log A) vs O(A) gap is noise and the
+# kernel-launch (or CPU interpret) overhead dominates: route to the
+# argsort oracle, exactly as the other wrappers route tiny shapes to ref.
+# Module-level so tests can force the kernel on small inputs.
+RADIX_MIN_ROWS = 1024
+
+
+def group_sort(keys, num_keys: int, *, impl: str = "argsort"):
+    """Stable sort of small-domain int32 keys — the primitive under every
+    dispatch hop's group sort.  Returns ``(ranks, starts)``: each element's
+    stable sorted position, and the (num_keys + 1,) exclusive prefix counts
+    (``starts[d]`` = #keys < d; ``starts[num_keys]`` = A).
+
+    ``impl="radix"`` runs the one-pass Pallas counting sort
+    (:mod:`repro.kernels.radix_sort`; interpret mode off-TPU) for inputs of
+    at least ``RADIX_MIN_ROWS`` rows; ``"argsort"`` — and every small input
+    — runs the packed single-operand ``lax.sort`` oracle.  Both are exact
+    stable integer sorts, so the outputs are bit-identical.
+    """
+    if impl not in SORT_IMPLS:
+        raise ValueError(f"unknown sort_impl {impl!r}; "
+                         f"expected one of {SORT_IMPLS}")
+    if impl == "radix" and keys.shape[0] >= RADIX_MIN_ROWS:
+        return group_sort_pallas(keys, num_keys, interpret=_interpret())
+    return ref.group_sort_ref(keys, num_keys)
 
 
 def grouped_ffn(x, w1, w3, w2, *, act: str = "gelu"):

@@ -45,6 +45,42 @@ def grouped_ffn_ragged_ref(rows, group_starts, w1, w3, w2, *, act: str = "gelu")
     return y.astype(rows.dtype)
 
 
+def group_sort_ref(keys, num_keys):
+    """Stable small-domain key sort: the argsort oracle of
+    :func:`repro.kernels.radix_sort.group_sort_pallas`.
+
+    ``keys``: (A,) int32 in ``[0, num_keys)``.  Returns ``(ranks, starts)``
+    — each element's stable sorted position and the (num_keys + 1,)
+    exclusive prefix counts (``starts[d]`` = #keys < d) — bit-identical to
+    the Pallas counting-sort kernel (a stable sort of integers is unique).
+
+    Fast path: (key, arrival-index) packed into one int32 so position
+    assignment needs a single-operand ``lax.sort`` instead of the stable
+    variadic argsort (~4x faster on CPU); packing order-preserves within
+    each key by construction.  Falls back to ``jnp.argsort(stable=True)``
+    when the packing would overflow int32.
+    """
+    if num_keys < 1:
+        raise ValueError(f"num_keys must be >= 1, got {num_keys}")
+    A = keys.shape[0]
+    if A == 0:
+        return (jnp.zeros((0,), jnp.int32),
+                jnp.zeros((num_keys + 1,), jnp.int32))
+    k32 = keys.astype(jnp.int32)
+    idx = jnp.arange(A, dtype=jnp.int32)
+    if num_keys * A < 2**31:
+        sp = jax.lax.sort(k32 * A + idx)
+        order = (sp % A).astype(jnp.int32)
+        skeys = (sp // A).astype(jnp.int32)
+    else:                                       # int32 packing would overflow
+        order = jnp.argsort(k32, stable=True).astype(jnp.int32)
+        skeys = jnp.take(k32, order)
+    starts = jnp.searchsorted(
+        skeys, jnp.arange(num_keys + 1, dtype=jnp.int32)).astype(jnp.int32)
+    ranks = jnp.zeros((A,), jnp.int32).at[order].set(idx)
+    return ranks, starts
+
+
 def dispatch_gather_ref(x, src):
     """MoE dispatch gather. x: (T, d); src: (R,) int32 source row per
     buffer slot, -1 = empty slot -> zeros. Returns (R, d)."""

@@ -67,6 +67,10 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         # ragged wire by default; "padded_a2a" restores the capacity hops
         cfg = with_dispatch_backend(cfg, "dropless",
                                     ragged_a2a="padded_a2a" not in opt_set)
+    if "radix_sort" in opt_set and cfg.moe is not None:
+        from repro.configs import with_dispatch_backend
+        cfg = with_dispatch_backend(cfg, cfg.moe.dispatch_backend,
+                                    sort_impl="radix")
     mesh = make_production_mesh(multi_pod=multi_pod)
     inter = ("pod", "data") if "epxpod" in opt_set else None
     plan = plan_from_mesh(mesh, smile_inter_axes=inter)
@@ -189,7 +193,7 @@ def main():
     ap.add_argument("--tag", default="")
     ap.add_argument("--opt", default="",
                     help="comma list: rsc,kvseq,tightcap,dropless,"
-                         "padded_a2a")
+                         "padded_a2a,radix_sort")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--out", default="experiments/dryrun")

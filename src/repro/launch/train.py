@@ -32,15 +32,17 @@ def train(arch: str, *, reduced: bool = True, steps: int = 50,
           optimizer: str = "lamb", seed: int = 0, log_every: int = 10,
           ckpt: str = "", mesh=None, micro_batch: int = 0,
           log_file: str = "", zero1: bool = False, eval_every: int = 0,
-          dispatch_backend: str = "", ragged_a2a: str = ""):
+          dispatch_backend: str = "", ragged_a2a: str = "",
+          sort_impl: str = ""):
     cfg = get_reduced(arch) if reduced else get_config(arch)
-    if dispatch_backend or ragged_a2a:
+    if dispatch_backend or ragged_a2a or sort_impl:
         from repro.configs import with_dispatch_backend
         backend = dispatch_backend or (
             cfg.moe.dispatch_backend if cfg.moe else "sort")
         cfg = with_dispatch_backend(
             cfg, backend,
-            ragged_a2a=None if not ragged_a2a else ragged_a2a == "on")
+            ragged_a2a=None if not ragged_a2a else ragged_a2a == "on",
+            sort_impl=sort_impl or None)
     plan = plan_from_mesh(mesh) if mesh is not None else single_device_plan()
     tcfg = TrainConfig(global_batch_size=batch, seq_len=seq, steps=steps,
                        optimizer=optimizer, lr=lr, warmup_steps=max(steps // 10, 1),
@@ -115,13 +117,19 @@ def main():
                     help="dropless only: ragged (exact-segment) vs "
                          "capacity-padded All2All dispatch hops "
                          "(default: config setting, on)")
+    ap.add_argument("--sort-impl", default="",
+                    choices=["", "radix", "argsort"],
+                    help="group sort under every dispatch hop: radix = "
+                         "one-pass Pallas counting sort (TPU fast path), "
+                         "argsort = XLA stable sort "
+                         "(default: config setting, argsort)")
     args = ap.parse_args()
     train(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
           seq=args.seq, lr=args.lr, optimizer=args.optimizer, seed=args.seed,
           ckpt=args.ckpt, micro_batch=args.micro_batch,
           log_file=args.log_file, zero1=args.zero1,
           eval_every=args.eval_every, dispatch_backend=args.dispatch_backend,
-          ragged_a2a=args.ragged_a2a)
+          ragged_a2a=args.ragged_a2a, sort_impl=args.sort_impl)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,265 @@
+"""Cross-backend dispatch conformance matrix.
+
+One parametrized matrix over ``dispatch_backend`` x ``ragged_a2a`` x
+``sort_impl`` — every cell a future backend or sort implementation will
+land in — asserting:
+
+* ``combine(dispatch(x))`` equivalence against the dense one-hot oracle,
+  at the primitive level and through full switch/SMILE layers;
+* the radix path bit-identical to the stable-argsort path on every cell
+  (a stable integer sort is unique, so everything downstream must agree
+  bit for bit — radix cells force the real Pallas kernel via the
+  ``RADIX_MIN_ROWS`` override, not the small-input fallback);
+* seeded determinism: two independent jit compilations of the same
+  dispatch produce bit-identical position arrays for both sort impls;
+* the edge cases only partially guarded before this suite existed —
+  ``num_groups == 1`` and all-assignments-dropped inputs — on every
+  backend and sort impl.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import MoEConfig
+from repro.core import dispatch as D
+from repro.core import moe as M
+from repro.kernels import ops as kops
+from repro.sharding.plan import single_device_plan
+
+PLAN = single_device_plan()
+
+BACKENDS = ("sort", "dense", "dropless")
+RAGGED = (True, False)
+SORT_IMPLS = ("radix", "argsort")
+MATRIX = [(b, r, s) for b in BACKENDS for r in RAGGED for s in SORT_IMPLS]
+
+
+@pytest.fixture
+def force_radix_kernel(monkeypatch):
+    """Route every radix-impl group sort through the real Pallas kernel
+    (interpret mode on CPU) regardless of input size, so "radix" cells
+    exercise the kernel rather than the small-input argsort fallback."""
+    monkeypatch.setattr(kops, "RADIX_MIN_ROWS", 0)
+
+
+def _case(t=64, k=2, groups=8, d=16, seed=0, invalid_frac=0.25):
+    rng = np.random.default_rng(seed)
+    A = t * k
+    x = jnp.asarray(rng.standard_normal((t, d)), jnp.float32)
+    gids = jnp.asarray(rng.integers(0, groups, A), jnp.int32)
+    gates = jnp.asarray(rng.uniform(0.0, 1.0, A), jnp.float32)
+    valid = jnp.asarray(rng.uniform(size=A) >= invalid_frac)
+    return x, gids, gates, valid
+
+
+def _roundtrip(backend, sort_impl, x, gids, gates, valid, groups, cap, k):
+    """combine(dispatch(x)) for one matrix cell (identity expert FFN)."""
+    if backend == "dropless":
+        rows, _, state = D.dispatch_ragged(x, gids, gates, groups, k=k,
+                                           valid=valid, sort_impl=sort_impl)
+        return D.combine(rows, state), state
+    buf, state = D.dispatch(x, gids, gates, groups, cap, k=k, valid=valid,
+                            backend=backend, sort_impl=sort_impl)
+    return D.combine(buf, state), state
+
+
+# --------------------------------------------------- primitive-level matrix
+@pytest.mark.parametrize("backend,sort_impl",
+                         [(b, s) for b in BACKENDS for s in SORT_IMPLS])
+def test_primitive_conformance(backend, sort_impl, force_radix_kernel):
+    """combine(dispatch(x)) against the dense oracle at ample capacity
+    (nothing drops, so every backend must reproduce the oracle), plus
+    bit-identical keep masks."""
+    t, k, groups = 64, 2, 8
+    x, gids, gates, valid = _case(t=t, k=k, groups=groups)
+    cap = t * k                                  # ample: nothing drops
+    y_oracle, st_oracle = _roundtrip("dense", "argsort", x, gids, gates,
+                                     valid, groups, cap, k)
+    y, state = _roundtrip(backend, sort_impl, x, gids, gates, valid,
+                          groups, cap, k)
+    np.testing.assert_array_equal(np.asarray(st_oracle.keep),
+                                  np.asarray(state.keep))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("overflow", [False, True])
+def test_primitive_radix_bitidentical(backend, overflow, force_radix_kernel):
+    """The acceptance bar: on every cell — including capacity overflow —
+    the radix path's buffers, positions, keep masks, and combined outputs
+    equal the argsort path's BIT FOR BIT."""
+    t, k, groups = 64, 2, 8
+    x, gids, gates, valid = _case(t=t, k=k, groups=groups, seed=1)
+    cap = 5 if overflow else t * k
+    outs = {}
+    for impl in SORT_IMPLS:
+        y, state = _roundtrip(backend, impl, x, gids, gates, valid,
+                              groups, cap, k)
+        outs[impl] = (y, state)
+    y_r, st_r = outs["radix"]
+    y_a, st_a = outs["argsort"]
+    np.testing.assert_array_equal(np.asarray(y_r), np.asarray(y_a))
+    np.testing.assert_array_equal(np.asarray(st_r.pos), np.asarray(st_a.pos))
+    np.testing.assert_array_equal(np.asarray(st_r.keep),
+                                  np.asarray(st_a.keep))
+    if st_r.slot_assign is not None:
+        np.testing.assert_array_equal(np.asarray(st_r.slot_assign),
+                                      np.asarray(st_a.slot_assign))
+
+
+# ------------------------------------------------------- full-layer matrix
+def _layer_cfg(router, backend, ragged, sort_impl):
+    return MoEConfig(num_experts=16, top_k=2, top_g=2, d_ff_expert=32,
+                     capacity_factor=8.0, router=router, grid=(4, 4),
+                     renorm_gates=True, dispatch_backend=backend,
+                     ragged_a2a=ragged, sort_impl=sort_impl)
+
+
+@pytest.fixture(scope="module")
+def layer_inputs():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (48, 32))
+    params = {}
+    for router in ("switch", "smile"):
+        cfg = _layer_cfg(router, "dense", True, "argsort")
+        params[router] = M.init_moe_params(key, cfg, 32, PLAN, glu=False)
+    return params, x
+
+
+@pytest.fixture(scope="module")
+def layer_oracle(layer_inputs):
+    params, x = layer_inputs
+    out = {}
+    for router in ("switch", "smile"):
+        cfg = _layer_cfg(router, "dense", True, "argsort")
+        y, stats = M.moe_layer(params[router], x, cfg, PLAN, act="gelu")
+        out[router] = (np.asarray(y), float(stats.lb_loss))
+    return out
+
+
+@pytest.mark.parametrize("router", ["switch", "smile"])
+@pytest.mark.parametrize("backend,ragged,sort_impl", MATRIX)
+def test_layer_conformance(router, backend, ragged, sort_impl,
+                           layer_inputs, layer_oracle, force_radix_kernel):
+    """Every (backend x ragged_a2a x sort_impl) cell of a full MoE layer —
+    both routers — matches the dense oracle at ample capacity, and the
+    radix cells match their argsort sibling bit for bit."""
+    params, x = layer_inputs
+    cfg = _layer_cfg(router, backend, ragged, sort_impl)
+    y, stats = M.moe_layer(params[router], x, cfg, PLAN, act="gelu")
+    y_oracle, lb_oracle = layer_oracle[router]
+    np.testing.assert_allclose(np.asarray(y), y_oracle,
+                               rtol=1e-5, atol=1e-6)
+    assert float(stats.lb_loss) == pytest.approx(lb_oracle, rel=1e-6)
+    assert float(stats.drop_frac) == 0.0
+    if sort_impl == "radix":
+        cfg_a = dataclasses.replace(cfg, sort_impl="argsort")
+        y_a, _ = M.moe_layer(params[router], x, cfg_a, PLAN, act="gelu")
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y_a))
+
+
+# ------------------------------------------------------ seeded determinism
+@pytest.mark.parametrize("sort_impl", SORT_IMPLS)
+def test_dispatch_determinism_across_recompiles(sort_impl,
+                                                force_radix_kernel):
+    """Two independent jit compilations of the same dispatch on identical
+    inputs produce bit-identical position arrays (the scatter targets have
+    no compilation-order freedom: every index is unique)."""
+    t, k, groups, cap = 128, 2, 16, 12
+    x, gids, gates, valid = _case(t=t, k=k, groups=groups, seed=7)
+
+    def make_jit():
+        # a fresh lambda defeats jax's function-identity jit cache, forcing
+        # an independent trace + compile
+        return jax.jit(lambda xx, gg, ww, vv: D.dispatch(
+            xx, gg, ww, groups, cap, k=k, valid=vv, backend="sort",
+            sort_impl=sort_impl))
+
+    buf1, st1 = make_jit()(x, gids, gates, valid)
+    buf2, st2 = make_jit()(x, gids, gates, valid)
+    np.testing.assert_array_equal(np.asarray(st1.pos), np.asarray(st2.pos))
+    np.testing.assert_array_equal(np.asarray(st1.keep), np.asarray(st2.keep))
+    np.testing.assert_array_equal(np.asarray(st1.slot_assign),
+                                  np.asarray(st2.slot_assign))
+    np.testing.assert_array_equal(np.asarray(buf1), np.asarray(buf2))
+
+    def make_ragged_jit():
+        return jax.jit(lambda xx, gg, ww, vv: D.dispatch_ragged(
+            xx, gg, ww, groups, k=k, valid=vv, sort_impl=sort_impl))
+
+    r1, s1, rst1 = make_ragged_jit()(x, gids, gates, valid)
+    r2, s2, rst2 = make_ragged_jit()(x, gids, gates, valid)
+    np.testing.assert_array_equal(np.asarray(rst1.pos), np.asarray(rst2.pos))
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+# ------------------------------------------------- edge-case regressions
+@pytest.mark.parametrize("sort_impl", SORT_IMPLS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_single_group_roundtrip(backend, sort_impl, force_radix_kernel):
+    """num_groups == 1: the degenerate domain every key maps to."""
+    t, k, d = 24, 2, 8
+    x, gids, gates, valid = _case(t=t, k=k, groups=1, d=d, seed=11)
+    cap = t * k
+    y_oracle, _ = _roundtrip("dense", "argsort", x, gids, gates, valid,
+                             1, cap, k)
+    y, state = _roundtrip(backend, sort_impl, x, gids, gates, valid,
+                          1, cap, k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_oracle),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(state.keep), np.asarray(valid))
+
+
+@pytest.mark.parametrize("sort_impl", SORT_IMPLS)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_all_assignments_dropped(backend, sort_impl, force_radix_kernel):
+    """valid == all-False (every assignment dropped before dispatch): the
+    buffer/layout must be empty, combine must return exact zeros, and
+    flags must be zero everywhere — previously only A == 0 was covered."""
+    t, k, groups, d = 16, 2, 4, 8
+    x, gids, gates, _ = _case(t=t, k=k, groups=groups, d=d, seed=13)
+    valid = jnp.zeros((t * k,), bool)
+    y, state = _roundtrip(backend, sort_impl, x, gids, gates, valid,
+                          groups, 8, k)
+    assert not np.asarray(state.keep).any()
+    assert not np.asarray(y).any()
+    assert y.shape == (t, d)
+    flags = D.dispatch_flags(jnp.ones((t * k,), jnp.float32), state)
+    assert not np.asarray(flags).any()
+    if backend == "dropless":
+        assert not np.asarray(state.slot_assign >= 0).any()
+
+
+def test_dispatch_rejects_empty_group_domain():
+    """num_groups < 1 must fail loudly, not produce shape-0 garbage."""
+    x = jnp.ones((4, 8))
+    gids = jnp.zeros((4,), jnp.int32)
+    gates = jnp.ones((4,))
+    for backend in BACKENDS:
+        if backend == "dropless":
+            continue
+        with pytest.raises(ValueError, match="num_groups"):
+            D.dispatch(x, gids, gates, 0, 2, backend=backend)
+    with pytest.raises(ValueError, match="num_groups"):
+        D.dispatch_ragged(x, gids, gates, 0)
+
+
+@pytest.mark.parametrize("sort_impl", SORT_IMPLS)
+def test_compact_rows_all_invalid(sort_impl, force_radix_kernel):
+    """Receiver re-compaction (the post-A2A group sort) with an all-invalid
+    slab: the FFN output must be exact zeros in every slab row."""
+    rng = np.random.default_rng(17)
+    S, d, f, G = 32, 8, 16, 4
+    rows = jnp.asarray(rng.standard_normal((S, d)), jnp.float32)
+    gid = jnp.asarray(rng.integers(0, G, S), jnp.int32)
+    w = {"w1": jnp.asarray(rng.standard_normal((G, d, f)), jnp.float32),
+         "w2": jnp.asarray(rng.standard_normal((G, f, d)), jnp.float32)}
+    out = M.experts_ffn_compact_rows(w, rows, gid, jnp.zeros((S,), bool),
+                                     G, "gelu", sort_impl=sort_impl)
+    assert out.shape == (S, d)
+    assert not np.asarray(out).any()
