@@ -8,7 +8,14 @@ strategies:
 * ``dropless_pad@cf``  — capacity buffer on the wire, ragged re-compaction
   before the FFN (the pre-ragged dropless path, ``ragged_a2a=False``);
 * ``ragged``           — exact tile-aligned segments on the wire via
-  ``comm.ragged_all_to_all`` (no capacity factor: there is no capacity).
+  ``comm.ragged_all_to_all`` (no capacity factor: there is no capacity);
+* ``ragged_rb@f``      — ragged wire PLUS the receive-bound factor
+  (``MoEConfig.recv_bound_factor``, the hop-pipeline knob): the receive
+  slab — and with it the post-hop re-compaction sort and recompacted FFN
+  bound — shrinks from the worst-case ``P x R`` rows to
+  ``~f x expected``, trading bounded clamp drops under extreme skew
+  (``drop_frac`` is measured and reported; 0.0 at this benchmark's
+  near-uniform routing) for the P-fold smaller compute bound.
 
 Alongside wall time it reports per-hop WIRE BYTES two ways: *measured* from
 the live routing (the actual per-destination segment counts the exchange
@@ -44,6 +51,7 @@ D_FF = 256
 ITERS = 10
 WARMUP = 2
 CFS = (1.25, 1.5, 2.0)
+RB_FACTORS = (1.5, 2.0)       # recv_bound_factor cells (ragged wire)
 # (local tokens per device, experts, k) on the 8-rank mesh — production-ish
 # local shapes (high tokens-per-expert, the regime the dropless sweep
 # documents as the win case)
@@ -87,29 +95,38 @@ def _child(smoke: bool) -> None:
         x = jax.random.normal(jax.random.PRNGKey(1), (P_ * T_local, D_MODEL))
 
         def layer_fn(cfg):
+            """One compiled (y, drop_frac) layer; the timing wrapper takes
+            y, ``drop`` reads the stat off the SAME compiled function."""
             params = init_moe_params(key, cfg, D_MODEL, plan, glu=False)
             pspecs = {"experts": {"w1": P("data", None, None, None),
                                   "w2": P("data", None, None, None)},
                       "router": {"w": P(None, None)}}
 
             def f(p, xx):
-                y, _ = moe_layer(p, xx, cfg, plan, act="gelu")
-                return y
+                y, st = moe_layer(p, xx, cfg, plan, act="gelu")
+                return y, st.drop_frac
 
             fsm = jax.jit(shard_map(f, mesh=mesh,
                                     in_specs=(pspecs, P("data", None)),
-                                    out_specs=P("data", None)))
-            return lambda xx: fsm(params, xx), params
+                                    out_specs=(P("data", None), P())))
+            timed_fn = lambda xx: fsm(params, xx)[0]
+            drop = lambda xx: float(fsm(params, xx)[1])
+            return timed_fn, params, drop
 
         fns = {}
         cfg_r = MoEConfig(num_experts=E, top_k=k, d_ff_expert=D_FF,
                           router="switch", grid=(P_, 1),
                           renorm_gates=(k > 1), dispatch_backend="dropless")
-        fns["ragged"], params_r = layer_fn(cfg_r)
+        fns["ragged"], params_r, _ = layer_fn(cfg_r)
+        rbs = RB_FACTORS[:1] if smoke else RB_FACTORS
+        rb_drops = {}
+        for rb in rbs:
+            fns[f"ragged_rb{rb}"], _, rb_drops[rb] = layer_fn(
+                dataclasses.replace(cfg_r, recv_bound_factor=rb))
         for cf in cfs:
-            fns[f"sort@cf{cf}"], _ = layer_fn(dataclasses.replace(
+            fns[f"sort@cf{cf}"], _, _ = layer_fn(dataclasses.replace(
                 cfg_r, dispatch_backend="sort", capacity_factor=cf))
-            fns[f"dropless_pad@cf{cf}"], _ = layer_fn(dataclasses.replace(
+            fns[f"dropless_pad@cf{cf}"], _, _ = layer_fn(dataclasses.replace(
                 cfg_r, ragged_a2a=False, capacity_factor=cf))
         timed = _time_interleaved(fns, (x,), iters=iters, warmup=warmup)
 
@@ -148,6 +165,26 @@ def _child(smoke: bool) -> None:
         row = {"T_local": T_local, "E": E, "k": k, "block": block,
                "ragged_ms": timed["ragged"],
                "ragged_wire_bytes_measured": ragged_measured}
+
+        # ---- bounded receive slab (recv_bound_factor) ----------------------
+        # the payoff is a STATIC bound: every post-hop stage (re-compaction
+        # sort, recompacted FFN) scans `slab_rows` instead of P x R
+        from repro.core.dispatch import ragged_rows
+        from repro.core.pipeline import recv_bound_rows
+        R_layout = ragged_rows(T_local * k, V, block)
+        nl_g = V // P_
+        row["ffn_bound_rows_unbounded"] = P_ * R_layout
+        for rb in rbs:
+            bnd = recv_bound_rows(rb, R_layout, P_, nl_g, block)
+            row[f"ragged_rb{rb}_ms"] = timed[f"ragged_rb{rb}"]
+            row[f"ffn_bound_rows_rb{rb}"] = bnd
+            row[f"ffn_bound_shrink_rb{rb}"] = P_ * R_layout / bnd
+            # measured drop_frac of the bounded-slab cell (honesty check:
+            # the clamp must not bite at this near-uniform routing) — read
+            # off the already-compiled timing function, zero extra compiles
+            row[f"drop_frac_rb{rb}"] = rb_drops[rb](x)
+            row[f"cpu_emulated_rb{rb}_speedup"] = (timed["ragged"]
+                                                   / timed[f"ragged_rb{rb}"])
         for cf in cfs:
             model = cost_model.hop_wire_report(
                 T_local, k, cf, V, block, D_MODEL, P_, bytes_per_elem=bpe)
@@ -173,7 +210,10 @@ def _child(smoke: bool) -> None:
                 row[f"modeled_step_ratio_cf{cf}_{hw.name}"] = t["ratio"]
         results.append(row)
 
+    rb_cols = RB_FACTORS[:1] if smoke else RB_FACTORS
     hdr = ("T_local,E,k,block,ragged_ms,"
+           + ",".join(f"rb{rb}_ms,rb{rb}_ffn_shrink,rb{rb}_drop"
+                      for rb in rb_cols) + ","
            + ",".join(f"sort_cf{cf}_ms,dropless_pad_cf{cf}_ms,"
                       f"wire_red_cf{cf},cpu_emu_ratio_cf{cf},"
                       f"v5e_model_ratio_cf{cf}" for cf in cfs))
@@ -181,6 +221,10 @@ def _child(smoke: bool) -> None:
     for r in results:
         print(f"{r['T_local']},{r['E']},{r['k']},{r['block']},"
               f"{r['ragged_ms']:.2f}," +
+              ",".join(f"{r[f'ragged_rb{rb}_ms']:.2f},"
+                       f"{r[f'ffn_bound_shrink_rb{rb}']:.2f}x,"
+                       f"{r[f'drop_frac_rb{rb}']:.4f}"
+                       for rb in rb_cols) + "," +
               ",".join(f"{r[f'sort_cf{cf}_ms']:.2f},"
                        f"{r[f'dropless_pad_cf{cf}_ms']:.2f},"
                        f"{r[f'wire_reduction_cf{cf}']:.2f}x,"
@@ -194,6 +238,7 @@ def _child(smoke: bool) -> None:
         "bench": "ragged_vs_padded_a2a",
         "d_model": D_MODEL, "d_ff": D_FF, "iters": ITERS, "ranks": P_,
         "capacity_factors": list(CFS),
+        "recv_bound_factors": list(RB_FACTORS),
         "jax_backend": jax.default_backend(),
         "native_ragged_all_to_all": hasattr(jax.lax, "ragged_all_to_all"),
         "caveat": ("CPU container, jax without lax.ragged_all_to_all: the "

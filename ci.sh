@@ -6,7 +6,11 @@
 #   ./ci.sh --conformance   dispatch conformance matrix only: every
 #                           dispatch_backend x ragged_a2a x sort_impl cell
 #                           vs the dense oracle + the group-sort property
-#                           suite (the targeted gate for dispatch changes)
+#                           suite + the hop-pipeline golden-equivalence
+#                           matrix (bit-identical to the pre-refactor
+#                           layers) and the options-registry / deprecation-
+#                           shim checks (the targeted gate for dispatch
+#                           and pipeline changes)
 #
 # The tier-1 suite is the driver-enforced gate; the smoke step additionally
 # compiles and runs one jitted round trip of every dispatch backend
@@ -18,8 +22,9 @@ cd "$(dirname "$0")"
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 if [[ "${1:-}" == "--conformance" ]]; then
-    echo "== dispatch conformance matrix =="
-    python -m pytest -q tests/test_dispatch_conformance.py tests/test_group_sort.py
+    echo "== dispatch conformance + pipeline golden-equivalence matrix =="
+    python -m pytest -q tests/test_dispatch_conformance.py \
+        tests/test_group_sort.py tests/test_pipeline_golden.py
     echo "CI OK (conformance)"
     exit 0
 fi

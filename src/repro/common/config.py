@@ -8,7 +8,79 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
+
+
+# =============================================================================
+# MoE options registry — the single source of truth for every runtime-
+# tunable dispatch/routing knob.  ``MoEConfig.with_options`` validates
+# against it, and both launchers derive their flags from it
+# (``launch/train.py`` CLI flags, ``launch/dryrun.py`` ``--opt`` tokens), so
+# a new knob added here is automatically reachable from every entry point —
+# it cannot silently miss a launcher.
+# =============================================================================
+
+@dataclass(frozen=True)
+class MoEOption:
+    """One tunable knob of :class:`MoEConfig`.
+
+    ``kind``: ``"choice"`` (string enum), ``"bool"``, or ``"float"``
+    (optional float, None = off).  ``dryrun_opts`` maps ``dryrun --opt``
+    tokens to the value they set (e.g. ``("padded_a2a", False)``); the CLI
+    flag name for ``train.py`` is derived from ``field``.  ``requires``
+    lists (field, value) prerequisites the option is meaningless without —
+    a dryrun token implies them (so ``--opt recv_bound`` alone works), and
+    ``MoEConfig.with_options`` enforces them on the resulting config.
+    """
+    field: str
+    kind: str
+    choices: Tuple[str, ...] = ()
+    help: str = ""
+    dryrun_opts: Tuple[Tuple[str, Any], ...] = ()
+    requires: Tuple[Tuple[str, Any], ...] = ()
+
+    @property
+    def flag(self) -> str:
+        return "--" + self.field.replace("_", "-")
+
+
+MOE_OPTIONS: Tuple[MoEOption, ...] = (
+    MoEOption("dispatch_backend", "choice", ("sort", "dense", "dropless"),
+              help="local dispatch/combine math: sort (argsort + fused "
+                   "gathers, the fast path), dense (one-hot/cumsum oracle), "
+                   "dropless (capacity-free tile-aligned ragged layout)",
+              dryrun_opts=(("dropless", "dropless"),)),
+    MoEOption("ragged_a2a", "bool",
+              help="dropless only: exact-segment ragged All2All hops (on) "
+                   "vs capacity-padded hops + on-arrival re-compaction (off)",
+              dryrun_opts=(("padded_a2a", False),)),
+    MoEOption("sort_impl", "choice", ("argsort", "radix"),
+              help="group sort under every dispatch hop: argsort = XLA "
+                   "stable sort, radix = one-pass Pallas counting sort "
+                   "(TPU fast path; bit-identical)",
+              dryrun_opts=(("radix_sort", "radix"),)),
+    MoEOption("recv_bound_factor", "float",
+              help="ragged hops only: bound each receive slab at ~factor x "
+                   "expected arrivals instead of the worst-case P x R rows "
+                   "(clamp-drops under extreme skew, reported in drop_frac; "
+                   "None/off = unbounded, bit-identical zero-drop)",
+              dryrun_opts=(("recv_bound", 2.0),),
+              requires=(("dispatch_backend", "dropless"),
+                        ("ragged_a2a", True))),
+    MoEOption("tight_level2_capacity", "bool",
+              help="SMILE: size level-2 capacity from expected valid "
+                   "arrivals instead of the padded level-1 buffer",
+              dryrun_opts=(("tightcap", True),)),
+)
+
+MOE_OPTION_FIELDS = {o.field: o for o in MOE_OPTIONS}
+# dryrun --opt token -> {field: value} with the option's prerequisites
+# merged in (so e.g. "recv_bound" alone implies dropless + ragged hops, the
+# way the old hand-written "dropless" token implied ragged_a2a); tokens not
+# in this map are dryrun-local (rsc, kvseq, zero1, ...).  Callers apply
+# tokens in sorted order for determinism.
+MOE_DRYRUN_OPTS = {tok: {**dict(o.requires), o.field: val}
+                   for o in MOE_OPTIONS for tok, val in o.dryrun_opts}
 
 
 @dataclass(frozen=True)
@@ -57,6 +129,61 @@ class MoEConfig:
     # interpret-validated off-TPU).  Bit-identical outputs either way; see
     # EXPERIMENTS.md §Perf-5 and tests/test_dispatch_conformance.py.
     sort_impl: str = "argsort"
+    # ragged hops only: bound each hop's receive slab at ~factor x expected
+    # arrivals (tile-aligned) instead of the zero-drop worst case of
+    # n_ranks x R rows.  Arrivals beyond the bound are clamp-dropped (the
+    # reverse hop echoes the clamped counts so senders know exactly which
+    # rows returned) and reported in drop_frac; the post-hop FFN/router
+    # bound shrinks ~n_ranks/factor-fold.  None = unbounded (bit-identical
+    # zero-drop, the default).  Applies to every ragged hop — switch's flat
+    # hop and both SMILE levels — through the shared HopSpec
+    # (repro.core.pipeline).  Caveat on jax >= 0.4.38: truncating hops
+    # currently force the fused-slab emulation instead of the native
+    # lax.ragged_all_to_all (a trace-time warning fires; see ROADMAP).
+    recv_bound_factor: Optional[float] = None
+
+    def with_options(self, **kw) -> "MoEConfig":
+        """Rebuild with runtime dispatch options swapped, validated against
+        :data:`MOE_OPTIONS` — the single entry point every launcher and the
+        deprecated ``configs.with_dispatch_backend`` shim route through.
+
+        Only registered option fields are accepted; choice values are
+        checked, and cross-option constraints (``recv_bound_factor``
+        requires the dropless backend with ragged hops) are enforced on the
+        *resulting* config so partial updates can't silently configure a
+        knob onto a path that ignores it.
+        """
+        for key, val in kw.items():
+            opt = MOE_OPTION_FIELDS.get(key)
+            if opt is None:
+                raise ValueError(
+                    f"unknown MoE option {key!r}; registered options: "
+                    f"{sorted(MOE_OPTION_FIELDS)}")
+            if opt.kind == "choice" and val not in opt.choices:
+                raise ValueError(f"{key}={val!r}: expected one of "
+                                 f"{opt.choices}")
+            if opt.kind == "bool" and not isinstance(val, bool):
+                raise ValueError(f"{key}={val!r}: expected a bool")
+            if opt.kind == "float" and val is not None:
+                # bool is an int subclass: True would silently mean 1.0
+                if (isinstance(val, bool)
+                        or not isinstance(val, (int, float)) or val <= 0):
+                    raise ValueError(f"{key}={val!r}: expected a positive "
+                                     f"number or None")
+        cfg = dataclasses.replace(self, **kw)
+        # registry-declared prerequisites, checked on the RESULT so partial
+        # updates can't configure a knob onto a path that ignores it (an
+        # option counts as active when its value is not None)
+        for opt in MOE_OPTIONS:
+            if not opt.requires or getattr(cfg, opt.field) is None:
+                continue
+            for req_field, req_val in opt.requires:
+                if getattr(cfg, req_field) != req_val:
+                    raise ValueError(
+                        f"{opt.field}={getattr(cfg, opt.field)!r} requires "
+                        f"{req_field}={req_val!r}; got "
+                        f"{getattr(cfg, req_field)!r}")
+        return cfg
 
 
 @dataclass(frozen=True)

@@ -53,32 +53,46 @@ def get_reduced(name: str) -> ModelConfig:
     return m.REDUCED
 
 
+def with_options(cfg: ModelConfig, **options) -> ModelConfig:
+    """Rebuild ``cfg`` with MoE dispatch options swapped; no-op for dense
+    architectures.
+
+    The single entry point for runtime MoE knobs: every option is validated
+    against :data:`repro.common.config.MOE_OPTIONS` (the same registry both
+    launchers derive their flags from), e.g. ``with_options(cfg,
+    dispatch_backend="dropless", recv_bound_factor=2.0)``.
+    """
+    if cfg.moe is None:
+        return cfg
+    return cfg.replace(moe=cfg.moe.with_options(**options))
+
+
 def with_dispatch_backend(cfg: ModelConfig, backend: str,
                           ragged_a2a: bool | None = None,
                           sort_impl: str | None = None) -> ModelConfig:
-    """Rebuild ``cfg`` with the MoE dispatch backend swapped ("sort",
-    "dense", or "dropless"); no-op for dense architectures.  ``ragged_a2a``
-    (dropless only) selects ragged vs capacity-padded All2All hops;
-    ``sort_impl`` ("radix" | "argsort") selects the group-sort kernel under
-    every dispatch hop; None keeps the config's current setting."""
-    import dataclasses
+    """Deprecated shim: use :func:`with_options` instead.
 
-    from repro.core.dispatch import BACKENDS
-    from repro.kernels.ops import SORT_IMPLS
-    if backend not in BACKENDS:
-        raise ValueError(f"unknown dispatch backend {backend!r}; "
-                         f"expected one of {BACKENDS}")
-    if sort_impl is not None and sort_impl not in SORT_IMPLS:
-        raise ValueError(f"unknown sort_impl {sort_impl!r}; "
-                         f"expected one of {SORT_IMPLS}")
-    if cfg.moe is None:
-        return cfg
+    Kept so pre-pipeline callers keep working (with a DeprecationWarning);
+    forwards to ``with_options``, which validates against the options
+    registry.
+    """
+    import warnings
+    warnings.warn(
+        "with_dispatch_backend is deprecated; use "
+        "configs.with_options(cfg, dispatch_backend=..., ...) — options are "
+        "validated against repro.common.config.MOE_OPTIONS",
+        DeprecationWarning, stacklevel=2)
     kw = {"dispatch_backend": backend}
     if ragged_a2a is not None:
         kw["ragged_a2a"] = ragged_a2a
     if sort_impl is not None:
         kw["sort_impl"] = sort_impl
-    return cfg.replace(moe=dataclasses.replace(cfg.moe, **kw))
+    if cfg.moe is None:
+        # preserve the old contract: validate even for dense archs
+        from repro.common.config import MoEConfig
+        MoEConfig().with_options(**kw)
+        return cfg
+    return with_options(cfg, **kw)
 
 
 def config_for_shape(name: str, shape: InputShape) -> ModelConfig:

@@ -1,10 +1,14 @@
 """Pluggable token dispatch/combine for MoE capacity buffers.
 
-Every routing schedule in :mod:`repro.core.moe` reduces to the same local
-primitive: place ``A = t*k`` routing assignments into a per-group capacity
-buffer ``(num_groups, cap, d)`` (dispatch), run expert compute, and read the
-buffer back to token order with gate weighting (combine).  Three backends
-implement that primitive behind one interface:
+Every routing schedule reduces to the same local primitive: place
+``A = t*k`` routing assignments into a per-group capacity buffer
+``(num_groups, cap, d)`` (dispatch), run expert compute, and read the
+buffer back to token order with gate weighting (combine).  The hop-pipeline
+executor (:mod:`repro.core.pipeline`) is the sole layer-level consumer —
+each :class:`~repro.core.pipeline.ExpertHop` runs exactly one
+dispatch/combine round trip through this interface, so a backend added
+here lands on switch's flat hop and both SMILE levels at once.  Three
+backends implement the primitive behind one interface:
 
 * ``"dense"`` — the original math, kept as the oracle: a dense
   ``(A, num_groups)`` one-hot matrix, a cumsum over the token axis for

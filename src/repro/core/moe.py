@@ -1,7 +1,8 @@
 """Mixture-of-Experts layers with one-hop (Switch) and bi-level (SMILE) routing.
 
-This module is the paper's contribution. Two collective schedules are
-implemented behind the same layer interface:
+This module is the paper's contribution.  Two collective schedules are
+implemented behind the same layer interface — and, as of the hop-pipeline
+refactor, as two *thin definitions over one shared executor*:
 
 * ``router="switch"`` — one-hop routing: a single flat All2All over the whole
   expert grid ``(n x m slots)``, exactly the Switch-Transformer baseline the
@@ -14,6 +15,38 @@ implemented behind the same layer interface:
   per layer (two forward, two reversed — paper Fig. 5), each confined to one
   level of the network hierarchy.
 
+**Hop-pipeline architecture** (:mod:`repro.core.pipeline`).  SMILE's thesis
+is that routing is compositional — Switch is one dispatch hop, SMILE is two
+nested ones — so the layer bodies here only *declare* that composition:
+
+* :func:`switch_moe` builds ONE :class:`~repro.core.pipeline.ExpertHop`
+  whose router maps each token's top-k experts onto the flat virtual-group
+  grid and whose :class:`~repro.core.pipeline.HopSpec` spans the joint
+  ``(inter x intra)`` mesh axes;
+* :func:`smile_moe` builds TWO hops — an inter-node hop (groups = nodes,
+  axes = ``plan.ep_inter``) whose inner compute is an intra-node hop
+  (groups = per-node virtual experts, axes = ``plan.ep_intra``) — the
+  level-2 router running on *arrived* tokens exactly as the paper draws it;
+
+and both hand their hop list to the same
+:func:`~repro.core.pipeline.execute_pipeline`, which owns every mechanism
+the old monolithic bodies duplicated: dispatch backend selection
+(``MoEConfig.dispatch_backend``: ``"sort"`` / ``"dense"`` capacity buffers
+vs ``"dropless"`` tile-aligned ragged layouts), the exchange kind per hop
+(``local`` | ``padded`` fixed-shape All2All | ``ragged`` exact-segment
+All2All, ``MoEConfig.ragged_a2a``), the group sort implementation
+(``MoEConfig.sort_impl``: XLA argsort vs the one-pass Pallas counting
+sort), rank-major group relabeling so every wire format sees contiguous
+per-rank segments, the ragged receive-bound factor
+(``MoEConfig.recv_bound_factor`` — bounded receive slabs with clamp-drops
+echoed on the reverse path), the expert-FFN flavor (padded / ragged /
+compact, Pallas kernels via ``use_kernel``), and one
+:class:`~repro.core.pipeline.MoEStats` accumulation path with per-hop
+``drop_frac``.  A backend, wire, or kernel improvement lands in the
+executor once and every schedule — Switch's flat hop and both SMILE levels
+— inherits it; see the pipeline module docstring for how each existing
+backend maps onto the IR.
+
 The expert grid is *logical* ``(n, m)`` (from config) and is folded onto the
 physical mesh axes, so the identical code runs on a single device (pure-jnp
 oracle for tests), on small fake-device test meshes, and on the 256/512-chip
@@ -21,73 +54,45 @@ production meshes.
 
 Capacity semantics follow the paper: per-group capacity
 ``C = ceil(k * T * capacity_factor / groups)``; overflow tokens are dropped
-(contribute zeros through the residual connection).
-
-**Dispatch-backend architecture.** The local dispatch/combine math — placing
-token assignments into per-group capacity buffers before each All2All and
-reading them back gate-weighted after — is delegated to the pluggable
-subsystem in :mod:`repro.core.dispatch`, selected by
-``MoEConfig.dispatch_backend``:
-
-* ``"sort"`` (default) — stable argsort by destination group +
-  sorted-segment position arithmetic; the buffer is built by *gathering*
-  rows straight from the token array (no k-fold token copy), optionally
-  through the fused Pallas gather/gather-reduce kernels in
-  :mod:`repro.kernels.moe_dispatch` (``use_kernel=True``).
-* ``"dense"`` — the O(tokens x groups) one-hot/cumsum oracle, kept for
-  verification and as the equivalence reference in tests.
-* ``"dropless"`` — capacity-free expert compute AND capacity-free wire:
-  tokens are compacted into the tile-aligned ragged layout of
-  :func:`repro.core.dispatch.dispatch_ragged` and the expert FFN runs over
-  *exact* per-group segment lengths through the ragged grouped-matmul
-  kernel (:mod:`repro.kernels.grouped_ffn`).  On a meshed expert grid every
-  dispatch hop — switch's one flat All2All and both SMILE levels — moves
-  exact tile-aligned token segments through
-  :func:`repro.sharding.comm.ragged_all_to_all` (a tiny count All2All, then
-  segment movement; ``cfg.ragged_a2a``, on by default): the layout's groups
-  are relabeled *rank-major* so each destination rank's wire segment is one
-  contiguous row range, the receiver rebuilds per-row (group, validity)
-  structure from the exchanged count grid alone, re-compacts, and the
-  reverse hop returns exact segments to their origin offsets.  Zero
-  capacity padding anywhere — wire or MXU — and **zero token drops
-  end-to-end** (``drop_frac`` is the exact constant 0.0; the static
-  receive bound absorbs any routing skew — note that bound is the worst
-  case ``n_ranks * R`` and inflates post-hop row counts accordingly, see
-  :func:`_ragged_hop`).  ``ragged_a2a=False`` restores the fixed-shape
-  capacity hop + on-arrival re-compaction for A/B comparison
-  (EXPERIMENTS.md §Perf-4 quantifies the wire-byte reduction).
-
-Both routing schedules run every dispatch hop (one for switch, two per
-direction for SMILE) through the same interface, so a backend improvement
-lands on all of them at once.
-
-Every hop's stable group sort — the sort backend's position assignment,
-the dropless sender layout, AND the ragged receiver re-compaction — runs
-through :func:`repro.kernels.ops.group_sort`, selected by
-``MoEConfig.sort_impl``: ``"argsort"`` (XLA's generic O(A log A) sort, the
-default here) vs ``"radix"`` (the one-pass O(A) Pallas counting sort of
-:mod:`repro.kernels.radix_sort` — the TPU fast path, bit-identical by
-construction; EXPERIMENTS.md §Perf-5).
+(contribute zeros through the residual connection).  The ``"dropless"``
+backend replaces capacity buffers with exact ragged layouts — zero padding
+into the FFN and zero drops end-to-end (unless a receive bound is
+configured, which trades bounded worst-case clamp drops for a ~P-fold
+smaller post-hop FFN bound).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.common.config import MoEConfig
-from repro.core import dispatch as D
-# re-exported for backward compatibility (tests and downstream code import
-# the dispatch primitives from here)
+from repro.core import pipeline as PL
 from repro.core.dispatch import (combine_gather, dispatch_scatter,
                                  positions_in_group, scatter_flags)
 from repro.core.layout import ExpertLayout, make_layout
+# re-exported for backward compatibility (tests, benchmarks and downstream
+# code import the loss/FFN/stats machinery from here)
+from repro.core.pipeline import (MoEStats, execute_pipeline, experts_ffn,
+                                 experts_ffn_compact,
+                                 experts_ffn_compact_rows, experts_ffn_ragged,
+                                 lb_loss_terms, scaled_lb_loss, z_loss,
+                                 zero_stats)
 from repro.sharding import comm
 from repro.sharding.plan import MeshPlan
+
+__all__ = [
+    "MoEStats", "zero_stats", "router_probs", "topk_gates", "capacity",
+    "lb_loss_terms", "scaled_lb_loss", "z_loss", "experts_ffn",
+    "experts_ffn_ragged", "experts_ffn_compact", "experts_ffn_compact_rows",
+    "switch_moe", "smile_moe", "moe_layer", "init_moe_params",
+    "combine_gather", "dispatch_scatter", "positions_in_group",
+    "scatter_flags",
+]
 
 
 # =============================================================================
@@ -117,215 +122,8 @@ def capacity(tokens: int, k: int, factor: float, groups: int) -> int:
 
 
 # =============================================================================
-# Load-balancing losses
+# Mesh/layout helpers shared by the hop builders
 # =============================================================================
-
-def lb_loss_terms(probs: jax.Array, top1: jax.Array, valid: jax.Array,
-                  num_groups: int, sync_axes) -> Tuple[jax.Array, jax.Array]:
-    """Return globally-averaged (f, P) vectors for one router (paper Eq. 4).
-
-    ``f_i`` — fraction of tokens whose argmax picked group i;
-    ``P_i`` — mean router probability mass on group i.
-    Both are psum'd over ``sync_axes`` so every device sees global stats.
-    """
-    v = valid.astype(jnp.float32)
-    cnt = comm.psum(v.sum(), sync_axes)
-    one = jax.nn.one_hot(top1, num_groups, dtype=jnp.float32) * v[:, None]
-    f = comm.psum(one.sum(0), sync_axes) / jnp.maximum(cnt, 1.0)
-    p = comm.psum((probs * v[:, None]).sum(0), sync_axes) / jnp.maximum(cnt, 1.0)
-    return f, p
-
-
-def scaled_lb_loss(f: jax.Array, p: jax.Array, coef: float) -> jax.Array:
-    """``coef * groups * sum_i f_i P_i`` — min = coef at uniform routing."""
-    n = f.shape[0]
-    return coef * n * jnp.sum(f * p)
-
-
-def z_loss(logits: jax.Array, valid: jax.Array, coef: float, sync_axes):
-    if coef == 0.0:
-        return jnp.float32(0.0)
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    v = valid.astype(jnp.float32)
-    s = comm.psum((jnp.square(lse) * v).sum(), sync_axes)
-    cnt = comm.psum(v.sum(), sync_axes)
-    return coef * s / jnp.maximum(cnt, 1.0)
-
-
-# =============================================================================
-# Expert FFN (grouped) — Pallas kernel plugs in here via kernels.ops
-# =============================================================================
-
-def experts_ffn(w: Dict[str, jax.Array], x: jax.Array, act: str,
-                use_kernel: bool = False) -> jax.Array:
-    """Apply per-group expert FFN. ``x``: (G, T, d); weights (G, d, f)/(G, f, d)."""
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.grouped_ffn(x, w["w1"], w.get("w3"), w["w2"], act=act)
-    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
-    h = jnp.einsum("gtd,gdf->gtf", x, w["w1"].astype(x.dtype))
-    h = actf(h)
-    if "w3" in w and w["w3"] is not None:
-        h = h * jnp.einsum("gtd,gdf->gtf", x, w["w3"].astype(x.dtype))
-    return jnp.einsum("gtf,gfd->gtd", h, w["w2"].astype(x.dtype))
-
-
-def experts_ffn_ragged(w: Dict[str, jax.Array], rows: jax.Array,
-                       group_starts: jax.Array, act: str, *,
-                       block: int, use_kernel: bool = False) -> jax.Array:
-    """Expert FFN over the dropless tile-aligned ragged layout.
-
-    ``rows``: (R, d) flat row array from :func:`repro.core.dispatch.
-    dispatch_ragged`; ``group_starts``: (G+1,) aligned segment offsets;
-    ``block``: the layout's row-tile size.  The non-kernel path runs one
-    batched matmul over the row tiles with per-tile weight selection —
-    every tile belongs to exactly one group, so this is the jnp shadow of
-    the Pallas kernel's scalar-prefetched weight indirection.
-    """
-    if use_kernel:
-        from repro.kernels import ops as kops
-        return kops.grouped_ffn_ragged(rows, group_starts, w["w1"],
-                                       w.get("w3"), w["w2"], block=block,
-                                       act=act)
-    R, d = rows.shape
-    tile_gid = D.ragged_tile_gids(group_starts, R // block, block)
-    xt = rows.reshape(R // block, block, d)
-    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
-    h = actf(jnp.einsum("tbd,tdf->tbf", xt,
-                        jnp.take(w["w1"].astype(rows.dtype), tile_gid, axis=0)))
-    if "w3" in w and w["w3"] is not None:
-        h = h * jnp.einsum("tbd,tdf->tbf", xt,
-                           jnp.take(w["w3"].astype(rows.dtype), tile_gid,
-                                    axis=0))
-    y = jnp.einsum("tbf,tfd->tbd", h,
-                   jnp.take(w["w2"].astype(rows.dtype), tile_gid, axis=0))
-    return y.reshape(R, d)
-
-
-def experts_ffn_compact_rows(w: Dict[str, jax.Array], rows: jax.Array,
-                             gid: jax.Array, valid: jax.Array,
-                             num_groups: int, act: str,
-                             use_kernel: bool = False,
-                             sort_impl: str = "argsort") -> jax.Array:
-    """Dropless expert compute over *received* rows with per-row group ids.
-
-    ``rows``: (S, d) arrived slab (any layout); ``gid``/``valid``: (S,) local
-    group id and real-row flag per slab row.  Compacts the valid rows into
-    the tile-aligned ragged layout, runs the FFN over exact segment lengths,
-    and scatters results back to the slab layout (invalid rows stay zero) —
-    the MXU never touches padding regardless of how the slab arrived.
-    """
-    ones = jnp.ones((rows.shape[0],), jnp.float32)
-    r2, starts, st = D.dispatch_ragged(rows, gid, ones, num_groups, k=1,
-                                       valid=valid, use_kernel=use_kernel,
-                                       sort_impl=sort_impl)
-    out = experts_ffn_ragged(w, r2, starts, act, block=st.cap,
-                             use_kernel=use_kernel)
-    return D.combine(out, st)
-
-
-def experts_ffn_compact(w: Dict[str, jax.Array], recv: jax.Array,
-                        valid: jax.Array, act: str,
-                        use_kernel: bool = False,
-                        sort_impl: str = "argsort") -> jax.Array:
-    """Dropless expert compute over a *received* capacity buffer.
-
-    When a fixed-shape All2All hop is kept (``ragged_a2a=False``), the
-    received ``(G, S, d)`` buffer still carries ``(cf - 1)/cf`` padding rows.
-    This compacts the valid rows (``valid``: (G, S) bool) into the ragged
-    layout, runs the FFN over exact segment lengths, and scatters results
-    back to the fixed slot layout (empty slots stay zero, matching what the
-    padded FFN would have produced) — the MegaScale-MoE "no padding into the
-    FFN" hot-path fix with the collective left untouched.
-    """
-    G, S, d = recv.shape
-    rgid = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
-    out = experts_ffn_compact_rows(w, recv.reshape(G * S, d), rgid,
-                                   valid.reshape(-1), G, act,
-                                   use_kernel=use_kernel,
-                                   sort_impl=sort_impl)
-    return out.reshape(G, S, d)
-
-
-# =============================================================================
-# Mesh folding helpers
-# =============================================================================
-
-def _fold_a2a(buf: jax.Array, groups: int, mesh_axes, mesh_size: int) -> jax.Array:
-    """All2All a (groups, ...) buffer over mesh axes of total size ``s | groups``.
-
-    Logical groups are block-assigned to mesh ranks. After the exchange the
-    leading dims are (src_rank, my_local_groups, ...), flattened back to
-    (mesh_size * groups//mesh_size, ...) in (src, local-group) order.
-    """
-    if mesh_size == 1:
-        return buf
-    b = groups // mesh_size
-    rest = buf.shape[1:]
-    buf = buf.reshape((mesh_size, b) + rest)
-    buf = comm.all_to_all(buf, mesh_axes, split_axis=0, concat_axis=0)
-    return buf.reshape((mesh_size * b,) + rest)
-
-
-def _ragged_hop(rows: jax.Array, group_starts: jax.Array,
-                seg_lens: jax.Array, n_ranks: int, axes, block: int):
-    """Forward ragged All2All of one dispatch hop — zero capacity padding.
-
-    ``rows``: (R, d) *rank-major* ragged layout (groups ordered so that each
-    destination rank's groups are contiguous); ``group_starts``: its
-    (n_ranks*n_local + 1,) aligned offsets; ``seg_lens``: the raw per-group
-    valid counts.  Exchanges exact tile-aligned segments plus the tiny count
-    grid, and rebuilds the received slab's per-row structure from the counts
-    alone — no intermediate capacity scatter anywhere.
-
-    Returns ``(recv, gid, valid, recv_counts, send_counts)``: ``recv``
-    (n_ranks*R, d) source-major received slab; ``gid``/``valid`` per slab
-    row (local group id, real-row flag); ``recv_counts`` (n_ranks,) aligned
-    per-source rows — exactly the ``send_counts`` of the mirrored reverse
-    hop, whose ``recv_counts`` are in turn this hop's ``send_counts`` (so
-    the reverse needs no count exchange at all).  Identity when ``axes`` is
-    empty.
-
-    The received slab is sized ``n_ranks * R`` — the static worst case
-    (every rank routes everything here), which is what guarantees zero
-    drops under ANY skew.  That bound is a real cost on every backend,
-    native op included: post-hop compute that scans the slab (the level-2
-    router on SMILE arrivals, the re-compaction sort, the recompacted FFN's
-    row bound) runs over ``~n_ranks/cf x`` more rows than the padded path's
-    capacity-bounded buffer, partially offsetting the wire win when those
-    stages aren't collective-dominated.  ROADMAP's "ragged receive-bound
-    factor" follow-up (bound = factor x expected arrivals, clamp-drops
-    reported) is the production-shaped trade.
-    """
-    n_local = seg_lens.shape[0] // n_ranks
-    send_counts = D.ragged_send_counts(group_starts, n_local)
-    # one count collective per hop: the (n_ranks, n_local) length grid also
-    # determines the aligned per-source segment extents, so the segment
-    # exchange skips its own count round trip
-    len_grid = comm.all_to_all(seg_lens.reshape(n_ranks, n_local), axes,
-                               split_axis=0, concat_axis=0)
-    recv_counts = (((len_grid + block - 1) // block) * block).sum(
-        axis=1).astype(jnp.int32)
-    recv, _ = comm.ragged_all_to_all(
-        rows, send_counts, axes, recv_rows=n_ranks * rows.shape[0],
-        recv_counts=recv_counts)
-    gid, valid = D.ragged_recv_layout(len_grid, block, recv.shape[0])
-    return recv, gid, valid, recv_counts, send_counts
-
-
-# =============================================================================
-# Layer state shared by both schedules
-# =============================================================================
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class MoEStats:
-    """Aux outputs of a MoE layer (losses are fp32 scalars)."""
-    lb_loss: jax.Array
-    z_loss: jax.Array
-    # diagnostic: fraction of token-assignments dropped by capacity
-    drop_frac: jax.Array
-
 
 def _sync_axes(plan: MeshPlan) -> Tuple[str, ...]:
     """All mesh axes across which this step's tokens are distinct (dedup'd)."""
@@ -371,8 +169,37 @@ def _my_expert_weights(w: Dict[str, jax.Array], layout: ExpertLayout,
     return out, b_n * b_m
 
 
+def _rank_major_perm(V: int, vpn: int, b_n: int, b_mh: int,
+                     m_mesh: int) -> Optional[jax.Array]:
+    """Canonical (node-major) virtual-group id -> rank-major id.
+
+    Canonical ``g = node * vpn + v_in_node``; joint rank over
+    ``(inter, intra)`` owns nodes ``[rank_n*b_n, ...)`` and per-node slots
+    ``[rank_m*b_mh, ...)``.  Identity (None) when the hop's mesh is 1x1 —
+    and a pure *label* permutation otherwise: per-group contents, positions
+    and capacity decisions are label-invariant (see pipeline docstring).
+    """
+    g = np.arange(V)
+    node, vin = g // vpn, g % vpn
+    rank = (node // b_n) * m_mesh + vin // b_mh
+    local = (node % b_n) * b_mh + vin % b_mh
+    perm = rank * (b_n * b_mh) + local
+    if np.array_equal(perm, g):
+        return None
+    return jnp.asarray(perm, jnp.int32)
+
+
+def _exchange_kind(cfg: MoEConfig, n_ranks: int, innermost: bool) -> str:
+    """Map MoEConfig onto a HopSpec exchange kind (one place, all hops)."""
+    if cfg.dispatch_backend != "dropless":
+        return "padded"
+    if innermost and n_ranks == 1:
+        return "local"                    # capacity- and exchange-free
+    return "ragged" if cfg.ragged_a2a else "padded"
+
+
 # =============================================================================
-# One-hop (Switch) schedule — the baseline
+# One-hop (Switch) schedule — the baseline, as a 1-hop pipeline
 # =============================================================================
 
 def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
@@ -380,148 +207,58 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
                use_kernel: bool = False) -> Tuple[jax.Array, MoEStats]:
     """One-hop MoE layer over local tokens ``x``: (t, d) -> (t, d).
 
-    Single flat All2All across the whole (inter x intra) expert grid.
+    A single :class:`~repro.core.pipeline.ExpertHop` spanning the whole
+    (inter x intra) expert grid; all mechanics live in the executor.
     """
     t, d = x.shape
     n_g, m_g = _grid(cfg, plan)
     layout = make_layout(cfg.num_experts, n_g, m_g)
     E, k = cfg.num_experts, cfg.top_k
     e_pn = layout.experts_per_node
-    sync = _sync_axes(plan)
-
-    probs, logits = router_probs(x, params["router"]["w"])     # (t, E)
-    gates, eidx = topk_gates(probs, k, renorm)
-
-    # map expert -> (node, slot-in-node, expert-in-slot) -> virtual group
-    e_flat = eidx.reshape(-1)                                   # (A,)
-    A = e_flat.shape[0]
-    node = e_flat // e_pn
-    e_local = e_flat % e_pn
-    if layout.r > 1:
-        rr = (jnp.arange(A) // k + jnp.arange(A) % k) % layout.r
-        slot = e_local * layout.r + rr
-        v_in_node = slot                                        # h == 1
-    else:
-        slot = e_local // layout.h
-        v_in_node = e_local                                     # slot*h + in-slot
-    v = node * layout.virtual_per_node + v_in_node              # (A,)
-
-    V = layout.virtual_total
+    vpn = layout.virtual_per_node
+    n_mesh, m_mesh = max(plan.n_inter, 1), max(plan.n_intra, 1)
     nm_mesh = plan.ep
-    b_n = n_g // max(plan.n_inter, 1)
-    b_m = m_g // max(plan.n_intra, 1)
-    dropless = cfg.dispatch_backend == "dropless"
-    simpl = cfg.sort_impl
+    b_n, b_m = n_g // n_mesh, m_g // m_mesh
+    b_mh = vpn // m_mesh
+    V = layout.virtual_total
 
-    if dropless and nm_mesh == 1:
-        # ---- fully capacity-free: the whole expert grid is local ------------
-        # no (V, cap, d) buffer, no padding into the FFN, zero token drops
-        rows, starts, dstate = D.dispatch_ragged(x, v, gates.reshape(-1), V,
-                                                 k=k, use_kernel=use_kernel,
-                                                 sort_impl=simpl)
-        keep = dstate.keep
-        wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
-                                            b_n, b_m)
-        out_rows = experts_ffn_ragged(wsel, rows, starts, act,
-                                      block=dstate.cap, use_kernel=use_kernel)
-        y = D.combine(out_rows, dstate)
-    elif dropless and cfg.ragged_a2a:
-        # ---- meshed + capacity-free: ragged All2All on the wire -------------
-        # relabel groups rank-major (joint rank over plan.ep_axes is
-        # inter-major, matching the capacity fold) so each rank's wire
-        # segment is one contiguous tile-aligned row range
-        m_mesh = max(plan.n_intra, 1)
-        b_mh = layout.virtual_per_node // m_mesh
-        rank = (node // b_n) * m_mesh + v_in_node // b_mh
-        local_g = (node % b_n) * b_mh + v_in_node % b_mh
-        g_sorted = rank * (b_n * b_mh) + local_g
-        rows, starts, dstate = D.dispatch_ragged(x, g_sorted,
-                                                 gates.reshape(-1), V, k=k,
-                                                 use_kernel=use_kernel,
-                                                 sort_impl=simpl)
-        keep = dstate.keep                                  # == all True
-        seg_lens = D.ragged_seg_lens(g_sorted, keep, V)
-        recv, rgid, rvalid, rcounts, scounts = _ragged_hop(
-            rows, starts, seg_lens, nm_mesh, plan.ep_axes, dstate.cap)
-        wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
-                                            b_n, b_m)
-        out_slab = experts_ffn_compact_rows(wsel, recv, rgid, rvalid,
-                                            n_groups, act, use_kernel,
-                                            sort_impl=simpl)
-        back, _ = comm.ragged_all_to_all(out_slab, rcounts, plan.ep_axes,
-                                         recv_rows=rows.shape[0],
-                                         seg_rows=rows.shape[0],
-                                         recv_counts=scounts)
-        y = D.combine(back, dstate)
-    else:
-        # capacity buffers only where the fixed-shape All2All payload needs
-        # them; dropless runs the hop on the sort backend's mechanics
-        hop_backend = "sort" if dropless else cfg.dispatch_backend
-        cap = capacity(t, k, cfg.capacity_factor, V)
-        buf, dstate = D.dispatch(x, v, gates.reshape(-1), V, cap, k=k,
-                                 backend=hop_backend,
-                                 use_kernel=use_kernel,
-                                 sort_impl=simpl)                # (V, cap, d)
-        keep = dstate.keep
-
-        # ---- single flat All2All over the combined grid --------------------
-        def fold(z):
-            # (V, cap, ...) -> mesh-major -> (groups, src*cap, ...)
-            rest = z.shape[1:]
-            z = z.reshape((max(plan.n_inter, 1), b_n, max(plan.n_intra, 1),
-                           b_m * layout.h) + rest)
-            z = jnp.moveaxis(z, 2, 1)                   # mesh dims first
-            z = z.reshape((nm_mesh, b_n * b_m * layout.h) + rest)
-            z = _fold_a2a(z, nm_mesh, plan.ep_axes, nm_mesh)    # src-major
-            z = z.reshape((nm_mesh, n_groups) + rest)
-            return jnp.moveaxis(z, 1, 0).reshape(
-                (n_groups, nm_mesh * rest[0]) + rest[1:])
-
-        wsel, n_groups = _my_expert_weights(params["experts"], layout,
-                                            plan, b_n, b_m)
-        recv = fold(buf)                                # (groups, src*cap, d)
-
-        # ---- expert compute -------------------------------------------------
-        if dropless:
-            # ragged re-compaction: the A2A keeps its fixed shape, but the
-            # FFN only sees the valid rows of the received buffer
-            slot_valid = D.dispatch_flags(keep.astype(jnp.float32), dstate)
-            rvalid = fold(slot_valid) > 0               # (groups, src*cap)
-            out = experts_ffn_compact(wsel, recv, rvalid, act, use_kernel,
-                                      sort_impl=simpl)
+    def route(xx, token_valid, outer_gid):
+        probs, logits = router_probs(xx, params["router"]["w"])     # (t, E)
+        gates, eidx = topk_gates(probs, k, renorm)
+        # map expert -> (node, slot-in-node, expert-in-slot) -> virtual group
+        e_flat = eidx.reshape(-1)                                   # (A,)
+        A = e_flat.shape[0]
+        node = e_flat // e_pn
+        e_local = e_flat % e_pn
+        if layout.r > 1:
+            # spread token assignments round-robin over the r replicas
+            rr = (jnp.arange(A) // k + jnp.arange(A) % k) % layout.r
+            v_in_node = e_local * layout.r + rr
         else:
-            out = experts_ffn(wsel, recv, act, use_kernel)
+            v_in_node = e_local                     # == slot * h + in-slot
+        v = node * vpn + v_in_node                                  # (A,)
+        valid = jnp.repeat(token_valid, k) if k > 1 else token_valid
+        return PL.RouteDecision(gates.reshape(-1), v, valid, token_valid,
+                                probs, logits, eidx[:, 0], k)
 
-        # ---- reverse All2All ------------------------------------------------
-        out = out.reshape(n_groups, nm_mesh, cap, d).transpose(1, 0, 2, 3)
-        out = out.reshape(nm_mesh, n_groups * cap * d)
-        back = _fold_a2a(out, nm_mesh, plan.ep_axes, nm_mesh)
-        back = back.reshape(nm_mesh, n_groups, cap, d)
-        # undo the mesh-major transpose: -> (n_g, m_g*h, cap, d)
-        back = back.reshape(max(plan.n_inter, 1), max(plan.n_intra, 1), b_n,
-                            b_m * layout.h, cap, d)
-        back = back.transpose(0, 2, 1, 3, 4, 5).reshape(V, cap, d)
+    spec = PL.HopSpec(
+        name="flat", axes=plan.ep_axes, n_ranks=nm_mesh, num_groups=V,
+        exchange=_exchange_kind(cfg, nm_mesh, innermost=True),
+        capacity=capacity(t, k, cfg.capacity_factor, V),
+        perm=_rank_major_perm(V, vpn, b_n, b_mh, m_mesh),
+        recv_bound_factor=cfg.recv_bound_factor,
+        lb_coef=cfg.lb_alpha, loss_groups=E)
 
-        y = D.combine(back, dstate)
-
-    # ---- losses -------------------------------------------------------------
-    top1 = eidx[:, 0]
-    f, p = lb_loss_terms(probs, top1, jnp.ones((t,), bool), E, sync)
-    lb = scaled_lb_loss(f, p, cfg.lb_alpha)
-    zl = z_loss(logits, jnp.ones((t,), bool), cfg.router_z_coef, sync)
-    if dropless and (nm_mesh == 1 or cfg.ragged_a2a):
-        # no capacity buffer anywhere on this path: nothing CAN drop, so the
-        # diagnostic is the exact constant 0.0 (not a psum over keep masks)
-        drop_frac = jnp.float32(0.0)
-    else:
-        dropped = comm.psum((~keep).sum().astype(jnp.float32), sync)
-        total = comm.psum(jnp.float32(A), sync)
-        drop_frac = dropped / jnp.maximum(total, 1)
-    return y, MoEStats(lb, zl, drop_frac)
+    wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
+                                        b_n, b_m)
+    assert n_groups == spec.groups_per_rank, (n_groups, spec)
+    return execute_pipeline(x, [PL.ExpertHop(route, spec)], wsel, cfg,
+                            act=act, use_kernel=use_kernel,
+                            sync=_sync_axes(plan))
 
 
 # =============================================================================
-# Bi-level (SMILE) schedule — the paper's contribution
+# Bi-level (SMILE) schedule — the paper's contribution, as a 2-hop pipeline
 # =============================================================================
 
 def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
@@ -529,223 +266,84 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
               use_kernel: bool = False) -> Tuple[jax.Array, MoEStats]:
     """Bi-level MoE layer over local tokens ``x``: (t, d) -> (t, d).
 
-    Level 1: inter-node router p (t, n) -> All2All over ``plan.ep_inter``.
-    Level 2: intra-node router q on *arrived* tokens -> All2All over
-    ``plan.ep_intra``. Reverse path mirrors both hops (4 All2Alls total).
-    Combine weight = p_i * q_j (Eq. 3). Routers are shared across devices
-    (same parameters everywhere), as in the paper.
+    Hop 1: inter-node router p (t, n) over ``plan.ep_inter``.  Hop 2
+    (hop 1's inner compute): intra-node router q on *arrived* tokens over
+    ``plan.ep_intra``.  The executor mirrors both reverse hops (4 All2Alls
+    total); combine weight = p_i * q_j (Eq. 3) falls out of the nested
+    gate-weighted combines.  Routers are shared across devices (same
+    parameters everywhere), as in the paper.
     """
     t, d = x.shape
     n_g, m_g = _grid(cfg, plan)
     layout = make_layout(cfg.num_experts, n_g, m_g)
     e_pn = layout.experts_per_node
+    vpn = layout.virtual_per_node
     k_local = max(1, cfg.top_k // top_g)
-    sync = _sync_axes(plan)
-    dropless = cfg.dispatch_backend == "dropless"
-    ragged = dropless and cfg.ragged_a2a
-    # without ragged A2A, dropless keeps a capacity buffer for each
-    # fixed-shape hop (on the sort backend's mechanics) and goes
-    # capacity-free only at the expert compute
-    hop_backend = "sort" if dropless else cfg.dispatch_backend
-    simpl = cfg.sort_impl
-    n_mesh = max(plan.n_inter, 1)
-    b_n = n_g // n_mesh
+    n_mesh, m_mesh = max(plan.n_inter, 1), max(plan.n_intra, 1)
+    b_n, b_m = n_g // n_mesh, m_g // m_mesh
+    b_mh = vpn // m_mesh
+    V2 = b_n * vpn                          # per-device virtual groups, hop 2
 
-    # ---------------- level 1: route to node --------------------------------
-    p_probs, p_logits = router_probs(x, params["router_inter"]["w"])  # (t, n)
-    p_gates, nidx = topk_gates(p_probs, top_g, renorm)
-    n1 = nidx.reshape(-1)                                             # (A1,)
-    A1 = n1.shape[0]
-    if ragged:
-        # ragged inter-node hop: node ids are already rank-major (rank =
-        # node // b_n), so the layout's segments map straight onto the wire
-        rows1, starts1, st1 = D.dispatch_ragged(x, n1, p_gates.reshape(-1),
-                                                n_g, k=top_g,
-                                                use_kernel=use_kernel,
-                                                sort_impl=simpl)
-        keep1 = st1.keep                                    # == all True
-        lens1 = D.ragged_seg_lens(n1, keep1, n_g)
-        recv1, node_row, valid1, rc1, sc1 = _ragged_hop(
-            rows1, starts1, lens1, n_mesh, plan.ep_inter, st1.cap)
-        x1 = recv1                                          # (t1, d) slab
-        t1 = x1.shape[0]
+    # ---------------- hop 1: route to node -----------------------------------
+    def route_inter(xx, token_valid, outer_gid):
+        probs, logits = router_probs(xx, params["router_inter"]["w"])  # (t,n)
+        gates, nidx = topk_gates(probs, top_g, renorm)
+        valid = (jnp.repeat(token_valid, top_g) if top_g > 1
+                 else token_valid)
+        return PL.RouteDecision(gates.reshape(-1), nidx.reshape(-1), valid,
+                                token_valid, probs, logits, nidx[:, 0],
+                                top_g)
+
+    cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
+    spec1 = PL.HopSpec(
+        name="inter", axes=plan.ep_inter, n_ranks=n_mesh, num_groups=n_g,
+        exchange=_exchange_kind(cfg, n_mesh, innermost=False),
+        capacity=cap1, perm=None,           # node ids are already rank-major
+        recv_bound_factor=cfg.recv_bound_factor,
+        lb_coef=cfg.lb_alpha, loss_groups=n_g)
+
+    # ---------------- hop 2: route within node -------------------------------
+    def route_intra(x1, valid1, node_row):
+        probs, logits = router_probs(x1, params["router_intra"]["w"])
+        gates, qidx = topk_gates(probs, k_local, renorm)
+        q1 = qidx.reshape(-1)                                       # (A2,)
+        A2 = q1.shape[0]
+        validA = jnp.repeat(valid1, k_local) if k_local > 1 else valid1
+        if layout.r > 1:
+            rr = jnp.arange(A2) % layout.r
+            v_in_node = q1 * layout.r + rr
+        else:
+            v_in_node = q1
+        # per-node virtual groups, node-major (canonical)
+        node_of = (jnp.repeat(node_row, k_local) if k_local > 1
+                   else node_row)
+        v2 = node_of * vpn + v_in_node
+        return PL.RouteDecision(gates.reshape(-1), v2, validA, valid1,
+                                probs, logits, qidx[:, 0], k_local)
+
+    if cfg.tight_level2_capacity:
+        # beyond-paper: the level-1 buffer is ~cap-factor x larger than the
+        # tokens it actually carries; sizing level-2 capacity from EXPECTED
+        # valid arrivals (t * g / n per node, x cap headroom) instead of the
+        # padded buffer removes the capacity compounding that doubles the
+        # intra-node All2All payload (EXPERIMENTS.md §Perf-2).
+        expected = max(1, math.ceil(t * top_g / n_g))
+        cap2 = capacity(expected, k_local, cfg.capacity_factor, vpn)
     else:
-        cap1 = capacity(t, top_g, cfg.capacity_factor, n_g)
-        buf1, st1 = D.dispatch(x, n1, p_gates.reshape(-1), n_g, cap1,
-                               k=top_g, backend=hop_backend,
-                               use_kernel=use_kernel,
-                               sort_impl=simpl)                       # (n_g,C1,d)
-        keep1 = st1.keep
-        vflag = D.dispatch_flags(jnp.ones((A1,), jnp.float32), st1)   # (n_g,C1)
+        cap2 = capacity(n_mesh * cap1, k_local, cfg.capacity_factor, vpn)
+    spec2 = PL.HopSpec(
+        name="intra", axes=plan.ep_intra, n_ranks=m_mesh, num_groups=V2,
+        exchange=_exchange_kind(cfg, m_mesh, innermost=True),
+        capacity=cap2, perm=_rank_major_perm(V2, vpn, b_n, b_mh, m_mesh),
+        recv_bound_factor=cfg.recv_bound_factor,
+        lb_coef=cfg.lb_beta, loss_groups=e_pn)
 
-        recv1 = _fold_a2a(buf1, n_g, plan.ep_inter, n_mesh)
-        rflag = _fold_a2a(vflag, n_g, plan.ep_inter, n_mesh)
-        # received order: (src_rank, my_local_node, C1) -> group by my node
-        recv1 = recv1.reshape(n_mesh, b_n, cap1, d).transpose(1, 0, 2, 3)
-        recv1 = recv1.reshape(b_n, n_mesh * cap1, d)
-        rflag = rflag.reshape(n_mesh, b_n, cap1).transpose(1, 0, 2)
-        rflag = rflag.reshape(b_n, n_mesh * cap1)
-
-        t1 = b_n * n_mesh * cap1                              # arrived tokens
-        x1 = recv1.reshape(t1, d)
-        valid1 = rflag.reshape(t1) > 0
-        node_row = jnp.repeat(jnp.arange(b_n, dtype=jnp.int32),
-                              n_mesh * cap1)
-
-    # ---------------- level 2: route within node ----------------------------
-    q_probs, q_logits = router_probs(x1, params["router_intra"]["w"])  # (t1,e_pn)
-    q_gates, qidx = topk_gates(q_probs, k_local, renorm)
-    q1 = qidx.reshape(-1)                                             # (A2,)
-    A2 = q1.shape[0]
-    validA = jnp.repeat(valid1, k_local) if k_local > 1 else valid1
-
-    if layout.r > 1:
-        rr = (jnp.arange(A2)) % layout.r
-        v_in_node = q1 * layout.r + rr
-    else:
-        v_in_node = q1
-    # per-node virtual groups, node-major so the intra A2A folds per node
-    node_of = (jnp.repeat(node_row, k_local) if k_local > 1 else node_row)
-    v2 = node_of * layout.virtual_per_node + v_in_node
-    V2 = b_n * layout.virtual_per_node
-    m_mesh = max(plan.n_intra, 1)
-    b_mh = layout.virtual_per_node // m_mesh                  # groups per rank
-    b_m = m_g // m_mesh
     wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
                                         b_n, b_m)
-    assert n_groups == b_n * b_mh, (n_groups, b_n, b_mh)
-
-    if dropless and m_mesh == 1:
-        # ---------------- level 2, capacity-free ------------------------------
-        # the intra-node expert grid is local: no (V2, C2, d) buffer, no
-        # level-2 capacity drops, FFN over exact per-group segment lengths
-        rows2, starts2, st2 = D.dispatch_ragged(x1, v2, q_gates.reshape(-1),
-                                                V2, k=k_local, valid=validA,
-                                                use_kernel=use_kernel,
-                                                sort_impl=simpl)
-        keep2 = st2.keep
-        out_rows = experts_ffn_ragged(wsel, rows2, starts2, act,
-                                      block=st2.cap, use_kernel=use_kernel)
-        y1 = D.combine(out_rows, st2)                          # (t1, d)
-    elif ragged:
-        # ---------------- level 2, meshed + ragged hop ------------------------
-        # relabel the per-node virtual groups intra-rank-major so each intra
-        # rank's wire segment is contiguous; no (V2, C2, d) buffer anywhere
-        g2 = ((v_in_node // b_mh) * (b_n * b_mh)
-              + node_of * b_mh + v_in_node % b_mh)
-        rows2, starts2, st2 = D.dispatch_ragged(x1, g2, q_gates.reshape(-1),
-                                                V2, k=k_local, valid=validA,
-                                                use_kernel=use_kernel,
-                                                sort_impl=simpl)
-        keep2 = st2.keep                                    # == validA
-        lens2 = D.ragged_seg_lens(g2, validA, V2)
-        recv2, gid2, rvalid2, rc2, sc2 = _ragged_hop(
-            rows2, starts2, lens2, m_mesh, plan.ep_intra, st2.cap)
-        out_slab = experts_ffn_compact_rows(wsel, recv2, gid2, rvalid2,
-                                            n_groups, act, use_kernel,
-                                            sort_impl=simpl)
-        back2, _ = comm.ragged_all_to_all(out_slab, rc2, plan.ep_intra,
-                                          recv_rows=rows2.shape[0],
-                                          seg_rows=rows2.shape[0],
-                                          recv_counts=sc2)
-        y1 = D.combine(back2, st2)                             # (t1, d)
-    else:
-        if cfg.tight_level2_capacity:
-            # beyond-paper: the level-1 buffer is ~cap-factor x larger than
-            # the tokens it actually carries; sizing level-2 capacity from
-            # EXPECTED valid arrivals (t * g / n per node, x cap headroom)
-            # instead of the padded buffer removes the capacity compounding
-            # that doubles the intra-node All2All payload. Drop stats confirm
-            # no extra drops at uniform routing (EXPERIMENTS.md §Perf-2).
-            expected = max(1, math.ceil(t * top_g / n_g))
-            cap2 = capacity(expected, k_local, cfg.capacity_factor,
-                            layout.virtual_per_node)
-        else:
-            cap2 = capacity(n_mesh * cap1, k_local, cfg.capacity_factor,
-                            layout.virtual_per_node)
-        buf2, st2 = D.dispatch(x1, v2, q_gates.reshape(-1), V2, cap2,
-                               k=k_local, valid=validA,
-                               backend=hop_backend,
-                               use_kernel=use_kernel,
-                               sort_impl=simpl)               # (V2, C2, d)
-        keep2 = st2.keep
-
-        def fold2(z):
-            # (V2, C2, ...) -> intra A2A per node block -> (groups, m*C2, ...)
-            rest = z.shape[1:]
-            z = z.reshape((b_n, m_mesh, b_mh) + rest)
-            z = jnp.moveaxis(z, 1, 0).reshape((m_mesh, b_n * b_mh) + rest)
-            z = _fold_a2a(z, m_mesh, plan.ep_intra, m_mesh)   # (m*.., C2, ..)
-            z = z.reshape((m_mesh, n_groups) + rest)
-            return jnp.moveaxis(z, 1, 0).reshape(
-                (n_groups, m_mesh * rest[0]) + rest[1:])
-
-        recv2 = fold2(buf2)                                   # (groups, S, d)
-
-        # ---------------- expert compute -------------------------------------
-        if dropless:
-            # fixed-shape intra A2A retained; FFN only sees valid rows
-            slot_valid2 = D.dispatch_flags(keep2.astype(jnp.float32), st2)
-            rvalid2 = fold2(slot_valid2) > 0                  # (groups, S)
-            out = experts_ffn_compact(wsel, recv2, rvalid2, act, use_kernel,
-                                      sort_impl=simpl)
-        else:
-            out = experts_ffn(wsel, recv2, act, use_kernel)
-
-        # ---------------- reverse level 2 ------------------------------------
-        out = out.reshape(n_groups, m_mesh, cap2, d).transpose(1, 0, 2, 3)
-        out = out.reshape(m_mesh, n_groups * cap2 * d)
-        back2 = _fold_a2a(out, m_mesh, plan.ep_intra, m_mesh)
-        back2 = back2.reshape(m_mesh, b_n, b_mh, cap2, d
-                              ).transpose(1, 0, 2, 3, 4)
-        back2 = back2.reshape(V2, cap2, d)
-        # apply intra gates where q is known (the intermediate hop)
-        y1 = D.combine(back2, st2)                             # (t1, d)
-
-    # ---------------- reverse level 1 ----------------------------------------
-    if ragged:
-        back1, _ = comm.ragged_all_to_all(y1, rc1, plan.ep_inter,
-                                          recv_rows=rows1.shape[0],
-                                          seg_rows=rows1.shape[0],
-                                          recv_counts=sc1)
-        y = D.combine(back1, st1)
-    else:
-        y1 = y1.reshape(b_n, n_mesh, cap1, d).transpose(1, 0, 2, 3)
-        y1 = y1.reshape(n_g, cap1, d)
-        back1 = _fold_a2a(y1, n_g, plan.ep_inter, n_mesh)      # (n_g, C1, d)
-        y = D.combine(back1, st1)
-
-    # ---------------- additive LB loss (Eq. 4) -------------------------------
-    f_i, P_i = lb_loss_terms(p_probs, nidx[:, 0], jnp.ones((t,), bool),
-                             n_g, sync)
-    lb_inter = scaled_lb_loss(f_i, P_i, cfg.lb_alpha)
-    sync2 = sync
-    f_j, Q_j = lb_loss_terms(q_probs, qidx[:, 0], valid1, e_pn, sync2)
-    lb_intra = scaled_lb_loss(f_j, Q_j, cfg.lb_beta)
-    zl = (z_loss(p_logits, jnp.ones((t,), bool), cfg.router_z_coef, sync)
-          + z_loss(q_logits, valid1, cfg.router_z_coef, sync2))
-    # drop_frac: each level normalized by ITS OWN valid-assignment count,
-    # then summed (levels compound).  Normalizing level-2 drops by the
-    # level-1 count (the old math) mis-scaled the stat whenever the counts
-    # differ — e.g. top_k > top_g makes A2's valid count ~k_local x A1, so
-    # level-2 drops were over-weighted by that factor.  A level that ran
-    # capacity-free reports the exact constant 0.0 — there is no capacity
-    # buffer on it, so nothing CAN drop and no keep-mask psum is issued.
-    zero = jnp.float32(0.0)
-    if ragged:
-        df1 = zero
-    else:
-        dropped1 = comm.psum((~keep1).sum().astype(jnp.float32), sync)
-        total1 = comm.psum(jnp.float32(A1), sync)
-        df1 = dropped1 / jnp.maximum(total1, 1)
-    if ragged or (dropless and m_mesh == 1):
-        df2 = zero
-    else:
-        dropped2 = comm.psum((validA & ~keep2).sum().astype(jnp.float32),
-                             sync2)
-        total2 = comm.psum(validA.sum().astype(jnp.float32), sync2)
-        df2 = dropped2 / jnp.maximum(total2, 1)
-    return y, MoEStats(lb_inter + lb_intra, zl, df1 + df2)
+    assert n_groups == spec2.groups_per_rank, (n_groups, spec2)
+    return execute_pipeline(
+        x, [PL.ExpertHop(route_inter, spec1), PL.ExpertHop(route_intra, spec2)],
+        wsel, cfg, act=act, use_kernel=use_kernel, sync=_sync_axes(plan))
 
 
 # =============================================================================

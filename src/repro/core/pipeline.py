@@ -1,0 +1,619 @@
+"""Composable hop-pipeline IR for MoE routing schedules.
+
+SMILE's core claim is that routing is *compositional*: Switch is ONE flat
+dispatch hop over the whole expert grid; SMILE is TWO nested hops over
+heterogeneous links (inter-node, then intra-node on the arrived tokens).
+This module makes that composition a first-class object instead of two
+parallel monoliths:
+
+* :class:`RouteDecision` — what a router decided for one hop: per-assignment
+  destination groups, gates and validity, plus the router's probs/logits for
+  the load-balancing and z losses.  Produced by a hop's ``route`` callable,
+  consumed by the executor.
+
+* :class:`HopSpec` — the *static* schedule of one hop: which mesh axes its
+  exchange spans, how many virtual groups it dispatches into, the exchange
+  kind (``"local"`` | ``"padded"`` | ``"ragged"``), the capacity / receive
+  bound policy, and the canonical→rank-major group relabeling permutation
+  that makes every wire format see contiguous per-rank segments.
+
+* :class:`ExpertHop` — one pipeline stage: a ``route`` callable bound to its
+  :class:`HopSpec`.
+
+* :func:`execute_pipeline` — the single executor both schedules share.  It
+  walks the hop list recursively: route → dispatch (capacity buffer or
+  tile-aligned ragged layout, per ``MoEConfig.dispatch_backend``) → exchange
+  (identity / fixed-shape All2All / ragged All2All) → inner compute (the
+  next hop, or the expert FFN at the innermost hop) → reverse exchange →
+  gate-weighted combine; accumulating one :class:`MoEStats` with *per-hop*
+  drop fractions along the way.  A backend or wire improvement lands here
+  once and every schedule — Switch's flat hop and both SMILE levels —
+  inherits it.
+
+**Group relabeling.**  Every hop's virtual groups are relabeled rank-major
+(``spec.perm``) *before* dispatch, so that rank ``p``'s groups occupy the
+contiguous id range ``[p*gpr, (p+1)*gpr)``.  This collapses what used to be
+three hand-maintained fold/transpose dances (switch's mesh-major fold,
+SMILE's per-node fold2, the ragged relabels) into one generic
+:func:`_fold` / :func:`_unfold` pair and one ragged wire layout.  The
+relabel is a pure permutation of group *labels*: per-group contents,
+positions and capacity decisions are label-invariant, so outputs are
+bit-identical to the node-major formulation (pinned by
+``tests/test_pipeline_golden.py``).
+
+**Receive-bound factor** (ROADMAP follow-up, implemented here once for all
+hops).  A ragged hop's receive slab is statically sized for worst-case skew
+— ``P x R`` rows, the price of zero drops when every rank routes everything
+to one place — and the post-hop compute bound (receiver re-compaction, the
+recompacted FFN, SMILE's level-2 router) scales with it.
+``HopSpec.recv_bound_factor`` bounds the slab at roughly
+``factor x expected arrivals`` instead (tile-aligned, never above ``P x
+R``): arrivals beyond the bound are clamp-dropped on the receiver, the
+reverse hop echoes each receiver's clamped counts back through its own
+count exchange so every sender learns exactly which of its rows returned,
+and the executor reports the clamp drops in the hop's ``drop_frac``.
+``factor=None`` (the default) keeps the bit-identical zero-drop worst-case
+bound.  The payoff is a ~``P/factor``-fold smaller post-hop FFN bound —
+what a production deployment runs with the LB loss keeping skew near 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch as D
+from repro.sharding import comm
+
+# number of hop slots in the fixed-shape per-hop drop vector (switch uses 1,
+# SMILE 2; the vector is zero-padded so stats trees from different routers
+# and dense layers always add)
+MAX_HOPS = 2
+
+EXCHANGES = ("local", "padded", "ragged")
+
+
+# =============================================================================
+# Layer stats (accumulated by the executor; one path for every schedule)
+# =============================================================================
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MoEStats:
+    """Aux outputs of a MoE layer (fp32 scalars / fixed-shape vectors).
+
+    ``drop_frac`` is the summed-over-hops diagnostic every consumer already
+    reads; ``hop_drop_frac`` is the per-hop breakdown — slot 0 is the
+    outermost hop (switch's flat hop / SMILE level 1), slot 1 SMILE level 2,
+    unused slots exactly 0.0 — with one accumulation shape for both routers
+    (the executor owns it; the old per-schedule ad-hoc folding is gone).
+    """
+    lb_loss: jax.Array
+    z_loss: jax.Array
+    # diagnostic: fraction of token-assignments dropped (capacity overflow
+    # on padded hops, receive-bound clamping on bounded ragged hops)
+    drop_frac: jax.Array
+    hop_drop_frac: jax.Array        # (MAX_HOPS,) per-hop breakdown
+
+
+def zero_stats() -> MoEStats:
+    z = jnp.float32(0.0)
+    return MoEStats(z, z, z, jnp.zeros((MAX_HOPS,), jnp.float32))
+
+
+# =============================================================================
+# Routing losses (pure; shared by every hop)
+# =============================================================================
+
+def lb_loss_terms(probs: jax.Array, top1: jax.Array, valid: jax.Array,
+                  num_groups: int, sync_axes) -> Tuple[jax.Array, jax.Array]:
+    """Return globally-averaged (f, P) vectors for one router (paper Eq. 4).
+
+    ``f_i`` — fraction of tokens whose argmax picked group i;
+    ``P_i`` — mean router probability mass on group i.
+    Both are psum'd over ``sync_axes`` so every device sees global stats.
+    """
+    v = valid.astype(jnp.float32)
+    cnt = comm.psum(v.sum(), sync_axes)
+    one = jax.nn.one_hot(top1, num_groups, dtype=jnp.float32) * v[:, None]
+    f = comm.psum(one.sum(0), sync_axes) / jnp.maximum(cnt, 1.0)
+    p = comm.psum((probs * v[:, None]).sum(0), sync_axes) / jnp.maximum(cnt, 1.0)
+    return f, p
+
+
+def scaled_lb_loss(f: jax.Array, p: jax.Array, coef: float) -> jax.Array:
+    """``coef * groups * sum_i f_i P_i`` — min = coef at uniform routing."""
+    n = f.shape[0]
+    return coef * n * jnp.sum(f * p)
+
+
+def z_loss(logits: jax.Array, valid: jax.Array, coef: float, sync_axes):
+    if coef == 0.0:
+        return jnp.float32(0.0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = valid.astype(jnp.float32)
+    s = comm.psum((jnp.square(lse) * v).sum(), sync_axes)
+    cnt = comm.psum(v.sum(), sync_axes)
+    return coef * s / jnp.maximum(cnt, 1.0)
+
+
+# =============================================================================
+# Expert FFN flavors (padded / ragged / compact) — Pallas kernels plug in
+# via kernels.ops
+# =============================================================================
+
+def experts_ffn(w: Dict[str, jax.Array], x: jax.Array, act: str,
+                use_kernel: bool = False) -> jax.Array:
+    """Apply per-group expert FFN. ``x``: (G, T, d); weights (G, d, f)/(G, f, d)."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.grouped_ffn(x, w["w1"], w.get("w3"), w["w2"], act=act)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = jnp.einsum("gtd,gdf->gtf", x, w["w1"].astype(x.dtype))
+    h = actf(h)
+    if "w3" in w and w["w3"] is not None:
+        h = h * jnp.einsum("gtd,gdf->gtf", x, w["w3"].astype(x.dtype))
+    return jnp.einsum("gtf,gfd->gtd", h, w["w2"].astype(x.dtype))
+
+
+def experts_ffn_ragged(w: Dict[str, jax.Array], rows: jax.Array,
+                       group_starts: jax.Array, act: str, *,
+                       block: int, use_kernel: bool = False) -> jax.Array:
+    """Expert FFN over the dropless tile-aligned ragged layout.
+
+    ``rows``: (R, d) flat row array from :func:`repro.core.dispatch.
+    dispatch_ragged`; ``group_starts``: (G+1,) aligned segment offsets;
+    ``block``: the layout's row-tile size.  The non-kernel path runs one
+    batched matmul over the row tiles with per-tile weight selection —
+    every tile belongs to exactly one group, so this is the jnp shadow of
+    the Pallas kernel's scalar-prefetched weight indirection.
+    """
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.grouped_ffn_ragged(rows, group_starts, w["w1"],
+                                       w.get("w3"), w["w2"], block=block,
+                                       act=act)
+    R, d = rows.shape
+    tile_gid = D.ragged_tile_gids(group_starts, R // block, block)
+    xt = rows.reshape(R // block, block, d)
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    h = actf(jnp.einsum("tbd,tdf->tbf", xt,
+                        jnp.take(w["w1"].astype(rows.dtype), tile_gid, axis=0)))
+    if "w3" in w and w["w3"] is not None:
+        h = h * jnp.einsum("tbd,tdf->tbf", xt,
+                           jnp.take(w["w3"].astype(rows.dtype), tile_gid,
+                                    axis=0))
+    y = jnp.einsum("tbf,tfd->tbd", h,
+                   jnp.take(w["w2"].astype(rows.dtype), tile_gid, axis=0))
+    return y.reshape(R, d)
+
+
+def experts_ffn_compact_rows(w: Dict[str, jax.Array], rows: jax.Array,
+                             gid: jax.Array, valid: jax.Array,
+                             num_groups: int, act: str,
+                             use_kernel: bool = False,
+                             sort_impl: str = "argsort") -> jax.Array:
+    """Dropless expert compute over *received* rows with per-row group ids.
+
+    ``rows``: (S, d) arrived slab (any layout); ``gid``/``valid``: (S,) local
+    group id and real-row flag per slab row.  Compacts the valid rows into
+    the tile-aligned ragged layout, runs the FFN over exact segment lengths,
+    and scatters results back to the slab layout (invalid rows stay zero) —
+    the MXU never touches padding regardless of how the slab arrived.
+    """
+    ones = jnp.ones((rows.shape[0],), jnp.float32)
+    r2, starts, st = D.dispatch_ragged(rows, gid, ones, num_groups, k=1,
+                                       valid=valid, use_kernel=use_kernel,
+                                       sort_impl=sort_impl)
+    out = experts_ffn_ragged(w, r2, starts, act, block=st.cap,
+                             use_kernel=use_kernel)
+    return D.combine(out, st)
+
+
+def experts_ffn_compact(w: Dict[str, jax.Array], recv: jax.Array,
+                        valid: jax.Array, act: str,
+                        use_kernel: bool = False,
+                        sort_impl: str = "argsort") -> jax.Array:
+    """Dropless expert compute over a *received* capacity buffer.
+
+    When a fixed-shape All2All hop is kept (``ragged_a2a=False``), the
+    received ``(G, S, d)`` buffer still carries ``(cf - 1)/cf`` padding rows.
+    This compacts the valid rows (``valid``: (G, S) bool) into the ragged
+    layout, runs the FFN over exact segment lengths, and scatters results
+    back to the fixed slot layout (empty slots stay zero, matching what the
+    padded FFN would have produced) — the MegaScale-MoE "no padding into the
+    FFN" hot-path fix with the collective left untouched.
+    """
+    G, S, d = recv.shape
+    rgid = jnp.repeat(jnp.arange(G, dtype=jnp.int32), S)
+    out = experts_ffn_compact_rows(w, recv.reshape(G * S, d), rgid,
+                                   valid.reshape(-1), G, act,
+                                   use_kernel=use_kernel,
+                                   sort_impl=sort_impl)
+    return out.reshape(G, S, d)
+
+
+# =============================================================================
+# The IR
+# =============================================================================
+
+@dataclasses.dataclass
+class RouteDecision:
+    """One router's verdict for one hop, in the executor's vocabulary.
+
+    Per-assignment arrays are flat ``(A = t * k,)``; assignment ``a`` belongs
+    to token ``a // k``.  ``group_ids`` are *canonical* virtual-group ids in
+    ``[0, spec.num_groups)`` — the executor applies ``spec.perm`` itself, so
+    route callables never deal in wire layouts.  ``probs``/``logits``/
+    ``top1`` are over the router's own domain (``spec.loss_groups`` wide)
+    and feed the LB / z losses; ``token_valid`` masks tokens that are
+    padding on arrival slabs (SMILE level 2).
+    """
+    gates: jax.Array          # (A,) combine weights
+    group_ids: jax.Array      # (A,) canonical virtual destination groups
+    valid: jax.Array          # (A,) assignment validity
+    token_valid: jax.Array    # (t,) token validity (losses)
+    probs: jax.Array          # (t, loss_groups)
+    logits: jax.Array         # (t, loss_groups)
+    top1: jax.Array           # (t,) router argmax (LB loss f-vector)
+    k: int                    # assignments per token
+
+
+@dataclasses.dataclass
+class HopSpec:
+    """Static schedule of one dispatch hop.
+
+    ``exchange`` picks the wire format:
+
+    * ``"local"``  — the hop's mesh is size 1 *and* it is the innermost hop
+      with the dropless backend: no exchange, no slab — the expert FFN runs
+      straight over the tile-aligned ragged layout.
+    * ``"padded"`` — fixed-shape capacity buffer (``capacity`` rows/group)
+      through a regular All2All (identity when ``n_ranks == 1``).  Used by
+      the capacity backends everywhere and by dropless when
+      ``ragged_a2a=False`` (re-compacted on arrival).
+    * ``"ragged"`` — exact tile-aligned segments through
+      :func:`repro.sharding.comm.ragged_all_to_all`; ``recv_bound_factor``
+      optionally clamps the receive slab (see module docstring).
+
+    ``perm`` (``(num_groups,)`` int32 or None) relabels canonical group ids
+    rank-major so rank ``p`` owns ids ``[p*gpr, (p+1)*gpr)``; None means the
+    canonical order already is rank-major (identity).
+    """
+    name: str                         # "flat" | "inter" | "intra" (display)
+    axes: Tuple[str, ...]             # mesh axes the exchange spans
+    n_ranks: int                      # P = product of axis sizes
+    num_groups: int                   # V: virtual groups dispatched into
+    exchange: str                     # "local" | "padded" | "ragged"
+    capacity: int = 0                 # rows/group (padded exchange only)
+    perm: Optional[jax.Array] = None  # canonical -> rank-major relabel
+    recv_bound_factor: Optional[float] = None   # ragged exchange only
+    lb_coef: float = 0.0              # LB loss coefficient for this hop
+    loss_groups: int = 0              # router prob domain (LB/z losses)
+
+    def __post_init__(self):
+        if self.exchange not in EXCHANGES:
+            raise ValueError(f"unknown exchange {self.exchange!r}; "
+                             f"expected one of {EXCHANGES}")
+        if self.num_groups % max(self.n_ranks, 1):
+            raise ValueError(f"num_groups {self.num_groups} must fold onto "
+                             f"{self.n_ranks} ranks")
+
+    @property
+    def groups_per_rank(self) -> int:
+        return self.num_groups // max(self.n_ranks, 1)
+
+
+@dataclasses.dataclass
+class ExpertHop:
+    """One pipeline stage: a router bound to its hop schedule.
+
+    ``route(x, token_valid, outer_gid) -> RouteDecision`` where ``x`` is the
+    (t, d) tokens this hop sees (original tokens for the outermost hop, the
+    previous hop's arrival slab otherwise), ``token_valid`` masks real rows,
+    and ``outer_gid`` (or None at the outermost hop) is each row's local
+    group under the *previous* hop — what SMILE's level-2 router needs to
+    keep tokens inside the node they arrived at.
+    """
+    route: Callable[[jax.Array, jax.Array, Optional[jax.Array]],
+                    RouteDecision]
+    spec: HopSpec
+
+
+# =============================================================================
+# Generic rank-major fold/unfold (padded exchange)
+# =============================================================================
+
+def _fold_a2a(buf: jax.Array, groups: int, mesh_axes, mesh_size: int
+              ) -> jax.Array:
+    """All2All a (groups, ...) buffer over mesh axes of total size ``s | groups``.
+
+    Logical groups are block-assigned to mesh ranks. After the exchange the
+    leading dims are (src_rank, my_local_groups, ...), flattened back to
+    (mesh_size * groups//mesh_size, ...) in (src, local-group) order.
+    """
+    if mesh_size == 1:
+        return buf
+    b = groups // mesh_size
+    rest = buf.shape[1:]
+    buf = buf.reshape((mesh_size, b) + rest)
+    buf = comm.all_to_all(buf, mesh_axes, split_axis=0, concat_axis=0)
+    return buf.reshape((mesh_size * b,) + rest)
+
+
+def _fold(z: jax.Array, spec: HopSpec) -> jax.Array:
+    """Forward exchange of a rank-major capacity buffer.
+
+    ``z``: (V, cap, ...) with groups rank-major -> (gpr, P*cap, ...): each of
+    my ``gpr`` local groups holds the ``cap`` arrivals from every source
+    rank, source-major — the layout the grouped FFN consumes directly.
+    """
+    P, gpr = spec.n_ranks, spec.groups_per_rank
+    rest = z.shape[1:]
+    z = _fold_a2a(z, spec.num_groups, spec.axes, P)         # src-major
+    z = z.reshape((P, gpr) + rest)
+    z = jnp.moveaxis(z, 1, 0)                               # groups first
+    return z.reshape((gpr, P * rest[0]) + rest[1:])
+
+
+def _unfold(y: jax.Array, spec: HopSpec, cap: int) -> jax.Array:
+    """Reverse exchange: (gpr, P*cap, ...) back to the (V, cap, ...)
+    rank-major buffer at the origin ranks — the exact mirror of :func:`_fold`."""
+    P, gpr = spec.n_ranks, spec.groups_per_rank
+    rest = y.shape[2:]
+    y = y.reshape((gpr, P, cap) + rest)
+    y = jnp.moveaxis(y, 1, 0)                               # dest rank first
+    y = y.reshape((spec.num_groups, cap) + rest)
+    return _fold_a2a(y, spec.num_groups, spec.axes, P)
+
+
+# =============================================================================
+# Ragged exchange (with the optional receive bound)
+# =============================================================================
+
+def recv_bound_rows(factor: float, rows: int, n_ranks: int,
+                    groups_per_rank: int, block: int) -> int:
+    """Static bounded receive-slab size for a clamped ragged hop.
+
+    ``factor x`` the sender-layout row count (== expected arrivals at
+    uniform routing) plus one tile of alignment slack per (source, local
+    group) — so ``factor >= 1`` never clamp-drops a perfectly uniform
+    routing — rounded up to the row tile and never above the worst-case
+    ``P x R`` bound.
+    """
+    slack = n_ranks * groups_per_rank * block
+    b = int(math.ceil(factor * rows)) + slack
+    b = ((b + block - 1) // block) * block
+    return min(b, n_ranks * rows)
+
+
+@dataclasses.dataclass
+class _RaggedHopState:
+    """Everything the reverse of one ragged hop needs."""
+    recv: jax.Array           # (B, d) received slab
+    gid: jax.Array            # (B,) local group per slab row
+    valid: jax.Array          # (B,) real-row flag per slab row
+    recv_counts: jax.Array    # (P,) aligned rows per source (unclamped)
+    send_counts: jax.Array    # (P,) aligned rows sent per destination
+    kept: Optional[jax.Array]  # (P,) rows kept per source after the clamp
+    rows_out: int             # R: sender layout rows (reverse recv bound)
+
+
+def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
+                    seg_lens: jax.Array, spec: HopSpec, block: int
+                    ) -> _RaggedHopState:
+    """Forward ragged All2All of one dispatch hop — zero capacity padding.
+
+    ``rows``: (R, d) *rank-major* ragged layout; ``group_starts``: its
+    (V + 1,) aligned offsets; ``seg_lens``: the raw per-group valid counts.
+    Exchanges exact tile-aligned segments plus the tiny count grid, and
+    rebuilds the received slab's per-row structure from the counts alone —
+    no intermediate capacity scatter anywhere.  Identity when the hop's
+    mesh is size 1.
+
+    Unclamped, the received slab is sized ``P * R`` — the static worst case
+    (every rank routes everything here), which is what guarantees zero
+    drops under ANY skew, and what makes every post-hop stage scan
+    ``~P/cf x`` more rows than a capacity bound would.  With
+    ``spec.recv_bound_factor`` set the slab is :func:`recv_bound_rows`
+    instead: sources land at their aligned offsets and whatever falls past
+    the bound is clamp-dropped (a tile-aligned *prefix* of the slab
+    survives, so surviving segments keep their offsets).  The reverse hop
+    (:func:`_ragged_reverse`) echoes the clamped counts back to the
+    senders.
+    """
+    P, nl = spec.n_ranks, spec.groups_per_rank
+    R = rows.shape[0]
+    send_counts = D.ragged_send_counts(group_starts, nl)
+    # one count collective per hop: the (P, nl) length grid also determines
+    # the aligned per-source segment extents, so the segment exchange skips
+    # its own count round trip
+    len_grid = comm.all_to_all(seg_lens.reshape(P, nl), spec.axes,
+                               split_axis=0, concat_axis=0)
+    rc = (((len_grid + block - 1) // block) * block).sum(
+        axis=1).astype(jnp.int32)
+    factor = spec.recv_bound_factor
+    clamped = (factor is not None and P > 1
+               and recv_bound_rows(factor, R, P, nl, block) < P * R)
+    if not clamped:
+        # no factor, single-rank hop, or a bound that doesn't reduce the
+        # worst case: keep the exact zero-drop path (native-op eligible, no
+        # echo exchange) so a non-reducing factor stays bit-identical AND
+        # collective-identical to factor=None
+        B = P * R
+        recv, _ = comm.ragged_all_to_all(rows, send_counts, spec.axes,
+                                         recv_rows=B, recv_counts=rc)
+        gid, valid = D.ragged_recv_layout(len_grid, block, B)
+        return _RaggedHopState(recv, gid, valid, rc, send_counts, None, R)
+    B = recv_bound_rows(factor, R, P, nl, block)
+    # bounded slab: segments past B rows are truncated on arrival (the
+    # emulations do this natively; allow_truncate keeps the jax-native op
+    # off this path, whose paired offset/size contract cannot truncate)
+    recv, _ = comm.ragged_all_to_all(rows, send_counts, spec.axes,
+                                     recv_rows=B, recv_counts=rc,
+                                     allow_truncate=True)
+    gid, valid = D.ragged_recv_layout(len_grid, block, B)
+    kept = jnp.clip(B - comm.excl_cumsum(rc), 0, rc)
+    return _RaggedHopState(recv, gid, valid, rc, send_counts, kept, R)
+
+
+def _ragged_reverse(y_slab: jax.Array, hs: _RaggedHopState, spec: HopSpec
+                    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Reverse ragged All2All: route each source's slab segment back to its
+    origin rank at the origin offsets.
+
+    Returns ``(back, survived)``: ``back`` (R, d) aligned with the sender's
+    original layout rows; ``survived`` (R,) marks the rows whose results
+    actually returned — None on the unclamped path (everything returns, no
+    extra collective: the mirrored counts are already known).  On the
+    clamped path the reverse runs its own tiny count exchange, which is
+    exactly the "clamped counts echoed on the reverse path": every sender
+    learns how many of its rows each receiver kept, reconstructs which
+    layout rows those were (each receiver keeps a contiguous *prefix* of
+    each sender's segment), and zero-fills the clamp-dropped rows.
+    """
+    R = hs.rows_out
+    if hs.kept is None:
+        back, _ = comm.ragged_all_to_all(y_slab, hs.recv_counts, spec.axes,
+                                         recv_rows=R, seg_rows=R,
+                                         recv_counts=hs.send_counts)
+        return back, None
+    # clamped: each surviving forward segment is a prefix of the slab, so
+    # sending `kept` rows from the unclamped offsets is self-consistent.
+    # The reverse can never truncate (sum(rb) <= sum(send_counts) <= R), so
+    # it stays native-op eligible — only the forward needs allow_truncate
+    back_c, rb = comm.ragged_all_to_all(y_slab, hs.kept, spec.axes,
+                                        recv_rows=R, seg_rows=R)
+    # rb[p] = rows peer p kept of MY segment (the echo). Returning segments
+    # arrive compacted at cumsum(rb); remap each to its original offset.
+    send_starts = jnp.concatenate(
+        [comm.excl_cumsum(hs.send_counts),
+         hs.send_counts.sum().reshape(1).astype(jnp.int32)])
+    seg, within, ok = D.ragged_row_membership(send_starts, rb, R)
+    rboff = comm.excl_cumsum(rb)
+    src = jnp.where(ok, jnp.take(rboff, seg) + within, 0)
+    back = jnp.where(ok[:, None], jnp.take(back_c, src, axis=0), 0)
+    return back, ok
+
+
+# =============================================================================
+# The executor
+# =============================================================================
+
+def _occupancy(st: D.CombineState, A: int) -> jax.Array:
+    """Per-slot occupancy flags mirroring the token dispatch."""
+    return D.dispatch_flags(jnp.ones((A,), jnp.float32), st)
+
+
+def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
+                     wsel: Dict[str, jax.Array], cfg, *, act: str,
+                     use_kernel: bool, sync) -> Tuple[jax.Array, MoEStats]:
+    """Run a routing schedule expressed as a hop pipeline.
+
+    ``x``: (t, d) local tokens; ``hops``: outermost-first; ``wsel``: this
+    device's expert weights, (gpr_innermost, d, f) groups in local order;
+    ``cfg``: :class:`repro.common.config.MoEConfig` (dispatch backend, sort
+    impl, z coefficient); ``sync``: mesh axes for globally-averaged stats.
+
+    Returns ``(y, stats)`` with ``y`` (t, d) gate-weighted combined outputs
+    and one :class:`MoEStats` accumulated across all hops (lb and z losses
+    summed, ``drop_frac`` summed with the per-hop breakdown preserved).
+    """
+    if len(hops) > MAX_HOPS:
+        raise ValueError(f"pipeline has {len(hops)} hops; MAX_HOPS is "
+                         f"{MAX_HOPS} (bump it alongside MoEStats)")
+    dropless = cfg.dispatch_backend == "dropless"
+    simpl = cfg.sort_impl
+    zero = jnp.float32(0.0)
+    lb_terms, z_terms = [], []
+    hop_drops = [zero] * MAX_HOPS
+
+    def run_hop(level: int, x: jax.Array, token_valid: jax.Array,
+                outer_gid: Optional[jax.Array]) -> jax.Array:
+        hop = hops[level]
+        spec = hop.spec
+        innermost = level == len(hops) - 1
+        dec = hop.route(x, token_valid, outer_gid)
+        A, k = dec.group_ids.shape[0], dec.k
+        gid = (dec.group_ids if spec.perm is None
+               else jnp.take(spec.perm, dec.group_ids))
+
+        # ---- losses (one path per hop) --------------------------------------
+        f, p = lb_loss_terms(dec.probs, dec.top1, dec.token_valid,
+                             spec.loss_groups, sync)
+        lb_terms.append(scaled_lb_loss(f, p, spec.lb_coef))
+        z_terms.append(z_loss(dec.logits, dec.token_valid,
+                              cfg.router_z_coef, sync))
+
+        # ---- dispatch + exchange + inner compute + reverse + combine --------
+        if spec.exchange == "local":
+            # capacity-free and exchange-free: the expert grid backing this
+            # hop is local — FFN straight over exact ragged segment lengths
+            rows, starts, st = D.dispatch_ragged(
+                x, gid, dec.gates, spec.num_groups, k=k, valid=dec.valid,
+                use_kernel=use_kernel, sort_impl=simpl)
+            out = experts_ffn_ragged(wsel, rows, starts, act, block=st.cap,
+                                     use_kernel=use_kernel)
+            return D.combine(out, st)               # nothing CAN drop: 0.0
+
+        if spec.exchange == "ragged":
+            rows, starts, st = D.dispatch_ragged(
+                x, gid, dec.gates, spec.num_groups, k=k, valid=dec.valid,
+                use_kernel=use_kernel, sort_impl=simpl)
+            seg_lens = D.ragged_seg_lens(gid, st.keep, spec.num_groups)
+            hs = _ragged_forward(rows, starts, seg_lens, spec, st.cap)
+            if innermost:
+                y_slab = experts_ffn_compact_rows(
+                    wsel, hs.recv, hs.gid, hs.valid, spec.groups_per_rank,
+                    act, use_kernel, sort_impl=simpl)
+            else:
+                y_slab = run_hop(level + 1, hs.recv, hs.valid, hs.gid)
+            back, survived = _ragged_reverse(y_slab, hs, spec)
+            if survived is None:
+                # capacity-free end-to-end: exact-constant 0.0, no psum
+                return D.combine(back, st)
+            keep = st.keep & jnp.take(survived, jnp.maximum(st.pos, 0))
+            dropped = comm.psum((st.keep & ~keep).sum().astype(jnp.float32),
+                                sync)
+            total = comm.psum(st.keep.sum().astype(jnp.float32), sync)
+            hop_drops[level] = dropped / jnp.maximum(total, 1)
+            return D.combine(back, dataclasses.replace(st, keep=keep))
+
+        # ---- padded: fixed-shape capacity buffer on the wire ----------------
+        hop_backend = "sort" if dropless else cfg.dispatch_backend
+        buf, st = D.dispatch(x, gid, dec.gates, spec.num_groups,
+                             spec.capacity, k=k, valid=dec.valid,
+                             backend=hop_backend, use_kernel=use_kernel,
+                             sort_impl=simpl)
+        recv = _fold(buf, spec)                     # (gpr, P*cap, d)
+        if innermost:
+            if dropless:
+                # fixed-shape A2A retained; FFN only sees valid rows
+                rvalid = _fold(_occupancy(st, A), spec) > 0
+                out = experts_ffn_compact(wsel, recv, rvalid, act,
+                                          use_kernel, sort_impl=simpl)
+            else:
+                out = experts_ffn(wsel, recv, act, use_kernel)
+        else:
+            gpr, S, d = recv.shape
+            x1 = recv.reshape(gpr * S, d)
+            valid1 = _fold(_occupancy(st, A), spec).reshape(gpr * S) > 0
+            gid1 = jnp.repeat(jnp.arange(gpr, dtype=jnp.int32), S)
+            out = run_hop(level + 1, x1, valid1, gid1).reshape(gpr, S, d)
+        back = _unfold(out, spec, spec.capacity)
+        dropped = comm.psum((dec.valid & ~st.keep).sum().astype(jnp.float32),
+                            sync)
+        total = comm.psum(dec.valid.sum().astype(jnp.float32), sync)
+        hop_drops[level] = dropped / jnp.maximum(total, 1)
+        return D.combine(back, st)
+
+    t = x.shape[0]
+    y = run_hop(0, x, jnp.ones((t,), bool), None)
+    hop_vec = jnp.stack(hop_drops)
+    stats = MoEStats(sum(lb_terms[1:], lb_terms[0]),
+                     sum(z_terms[1:], z_terms[0]),
+                     hop_vec.sum(), hop_vec)
+    return y, stats

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.common.config import INPUT_SHAPES, TrainConfig
+from repro.common.config import INPUT_SHAPES, MOE_DRYRUN_OPTS, TrainConfig
 from repro.configs import config_for_shape, supports_shape
 from repro.launch import inputs as I
 from repro.launch.hlo_analysis import analyze_hlo, collective_summary
@@ -58,19 +58,25 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         cfg = cfg.replace(remat_save_collectives=True)
     if "kvseq" in opt_set:
         cfg = cfg.replace(kv_seq_shard=True)
-    if "tightcap" in opt_set and cfg.moe is not None:
-        import dataclasses
-        cfg = cfg.replace(moe=dataclasses.replace(
-            cfg.moe, tight_level2_capacity=True))
-    if "dropless" in opt_set and cfg.moe is not None:
-        from repro.configs import with_dispatch_backend
-        # ragged wire by default; "padded_a2a" restores the capacity hops
-        cfg = with_dispatch_backend(cfg, "dropless",
-                                    ragged_a2a="padded_a2a" not in opt_set)
-    if "radix_sort" in opt_set and cfg.moe is not None:
-        from repro.configs import with_dispatch_backend
-        cfg = with_dispatch_backend(cfg, cfg.moe.dispatch_backend,
-                                    sort_impl="radix")
+    # MoE --opt tokens are DERIVED from the options registry
+    # (repro.common.config.MOE_DRYRUN_OPTS): "dropless", "padded_a2a",
+    # "radix_sort", "recv_bound", "tightcap", ... — a knob registered there
+    # is automatically reachable here, validated by MoEConfig.with_options.
+    # Each token carries its prerequisites (recv_bound implies dropless +
+    # ragged hops); contradictory tokens (e.g. padded_a2a + recv_bound)
+    # fail loudly instead of one silently overriding the other.
+    moe_kw, moe_src = {}, {}
+    for tok in sorted(opt_set & MOE_DRYRUN_OPTS.keys()):
+        for fld, val in MOE_DRYRUN_OPTS[tok].items():
+            if fld in moe_kw and moe_kw[fld] != val:
+                raise ValueError(
+                    f"--opt tokens {moe_src[fld]!r} and {tok!r} disagree "
+                    f"on {fld} ({moe_kw[fld]!r} vs {val!r})")
+            moe_kw[fld] = val
+            moe_src.setdefault(fld, tok)
+    if moe_kw and cfg.moe is not None:
+        from repro.configs import with_options
+        cfg = with_options(cfg, **moe_kw)
     mesh = make_production_mesh(multi_pod=multi_pod)
     inter = ("pod", "data") if "epxpod" in opt_set else None
     plan = plan_from_mesh(mesh, smile_inter_axes=inter)
@@ -192,8 +198,9 @@ def main():
                     help="override MoE router (baseline comparisons)")
     ap.add_argument("--tag", default="")
     ap.add_argument("--opt", default="",
-                    help="comma list: rsc,kvseq,tightcap,dropless,"
-                         "padded_a2a,radix_sort")
+                    help="comma list: rsc,kvseq,zero1,bf16p,epxpod + the "
+                         "registry-derived MoE tokens "
+                         f"({','.join(sorted(MOE_DRYRUN_OPTS))})")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--out", default="experiments/dryrun")

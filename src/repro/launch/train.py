@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import TrainConfig
+from repro.common.config import MOE_OPTIONS, TrainConfig
 from repro.configs import get_config, get_reduced
 from repro.data.pipeline import DataPipeline
 from repro.models.transformer import init_model
@@ -26,23 +26,73 @@ from repro.sharding.plan import plan_from_mesh, single_device_plan
 from repro.train.checkpoint import save_checkpoint
 from repro.train.step import build_train_step
 
+_UNSET = object()       # float-flag default (argparse type-converts string
+                        # defaults, so "" cannot be the sentinel there)
+
+
+def _float_or_off(v: str):
+    """argparse type for float options: a number, or off/none -> None.
+    Raising ValueError here gives the clean 'usage:' argparse error instead
+    of a traceback."""
+    if v in ("off", "none"):
+        return None
+    return float(v)
+
+
+def add_moe_option_flags(ap) -> None:
+    """Add one CLI flag per registered MoE option (``--dispatch-backend``,
+    ``--ragged-a2a``, ``--sort-impl``, ``--recv-bound-factor``, ...).
+
+    Empty string = keep the config's setting; bools take on/off; floats take
+    a number or ``off`` (-> None).  The registry is the single source of
+    truth, so a new knob cannot silently miss this launcher.
+    """
+    for opt in MOE_OPTIONS:
+        if opt.kind == "choice":
+            ap.add_argument(opt.flag, default="",
+                            choices=("",) + opt.choices, help=opt.help)
+        elif opt.kind == "bool":
+            ap.add_argument(opt.flag, default="",
+                            choices=("", "on", "off"), help=opt.help)
+        else:  # float-or-none
+            ap.add_argument(opt.flag, default=_UNSET, type=_float_or_off,
+                            help=opt.help + " (number, or 'off' for None)")
+
+
+def parse_moe_option_flags(args) -> dict:
+    """Collect the registry-derived flags back into a with_options dict."""
+    opts = {}
+    for opt in MOE_OPTIONS:
+        v = getattr(args, opt.field)
+        if v is _UNSET or v == "":
+            continue
+        if opt.kind == "bool":
+            opts[opt.field] = v == "on"
+        else:           # choice (str) / float (already converted by argparse)
+            opts[opt.field] = v
+    return opts
+
 
 def train(arch: str, *, reduced: bool = True, steps: int = 50,
           batch: int = 16, seq: int = 128, lr: float = 3e-4,
           optimizer: str = "lamb", seed: int = 0, log_every: int = 10,
           ckpt: str = "", mesh=None, micro_batch: int = 0,
           log_file: str = "", zero1: bool = False, eval_every: int = 0,
-          dispatch_backend: str = "", ragged_a2a: str = "",
-          sort_impl: str = ""):
+          moe_options: dict | None = None, dispatch_backend: str = "",
+          ragged_a2a: str = "", sort_impl: str = ""):
     cfg = get_reduced(arch) if reduced else get_config(arch)
-    if dispatch_backend or ragged_a2a or sort_impl:
-        from repro.configs import with_dispatch_backend
-        backend = dispatch_backend or (
-            cfg.moe.dispatch_backend if cfg.moe else "sort")
-        cfg = with_dispatch_backend(
-            cfg, backend,
-            ragged_a2a=None if not ragged_a2a else ragged_a2a == "on",
-            sort_impl=sort_impl or None)
+    # moe_options is the registry-validated path; the three string kwargs
+    # are the legacy surface, folded in for backward compatibility
+    opts = dict(moe_options or {})
+    if dispatch_backend:
+        opts.setdefault("dispatch_backend", dispatch_backend)
+    if ragged_a2a:
+        opts.setdefault("ragged_a2a", ragged_a2a == "on")
+    if sort_impl:
+        opts.setdefault("sort_impl", sort_impl)
+    if opts:
+        from repro.configs import with_options
+        cfg = with_options(cfg, **opts)
     plan = plan_from_mesh(mesh) if mesh is not None else single_device_plan()
     tcfg = TrainConfig(global_batch_size=batch, seq_len=seq, steps=steps,
                        optimizer=optimizer, lr=lr, warmup_steps=max(steps // 10, 1),
@@ -109,27 +159,17 @@ def main():
     ap.add_argument("--zero1", action="store_true",
                     help="shard optimizer state over replicated axes")
     ap.add_argument("--eval-every", type=int, default=0)
-    ap.add_argument("--dispatch-backend", default="",
-                    choices=["", "sort", "dense", "dropless"],
-                    help="override MoEConfig.dispatch_backend "
-                         "(dropless = capacity-free expert compute)")
-    ap.add_argument("--ragged-a2a", default="", choices=["", "on", "off"],
-                    help="dropless only: ragged (exact-segment) vs "
-                         "capacity-padded All2All dispatch hops "
-                         "(default: config setting, on)")
-    ap.add_argument("--sort-impl", default="",
-                    choices=["", "radix", "argsort"],
-                    help="group sort under every dispatch hop: radix = "
-                         "one-pass Pallas counting sort (TPU fast path), "
-                         "argsort = XLA stable sort "
-                         "(default: config setting, argsort)")
+    # MoE dispatch flags are DERIVED from the options registry
+    # (repro.common.config.MOE_OPTIONS) — a knob registered there is
+    # automatically reachable here, with validation in MoEConfig.with_options
+    add_moe_option_flags(ap)
     args = ap.parse_args()
     train(args.arch, reduced=args.reduced, steps=args.steps, batch=args.batch,
           seq=args.seq, lr=args.lr, optimizer=args.optimizer, seed=args.seed,
           ckpt=args.ckpt, micro_batch=args.micro_batch,
           log_file=args.log_file, zero1=args.zero1,
-          eval_every=args.eval_every, dispatch_backend=args.dispatch_backend,
-          ragged_a2a=args.ragged_a2a, sort_impl=args.sort_impl)
+          eval_every=args.eval_every,
+          moe_options=parse_moe_option_flags(args))
 
 
 if __name__ == "__main__":

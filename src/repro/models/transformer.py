@@ -26,7 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.common.config import ModelConfig
-from repro.core.moe import MoEStats, init_moe_params, moe_layer
+from repro.core.moe import MoEStats, init_moe_params, moe_layer, zero_stats
 from repro.models import layers as L
 from repro.models import mamba2 as M2
 from repro.models import rwkv6 as RW
@@ -134,13 +134,13 @@ def _attn_fwd(p, x, cfg, plan, positions, cache, window, use_kernel=False):
 
 
 def _zero_stats() -> MoEStats:
-    z = jnp.float32(0.0)
-    return MoEStats(z, z, z)
+    return zero_stats()
 
 
 def _add_stats(a: MoEStats, b: MoEStats) -> MoEStats:
     return MoEStats(a.lb_loss + b.lb_loss, a.z_loss + b.z_loss,
-                    a.drop_frac + b.drop_frac)
+                    a.drop_frac + b.drop_frac,
+                    a.hop_drop_frac + b.hop_drop_frac)
 
 
 def dense_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):

@@ -111,7 +111,9 @@ def ppermute(x, axes: Axes, perm):
 
 
 # ------------------------------------------------------------- ragged All2All
-def _excl_cumsum(c: jax.Array) -> jax.Array:
+def excl_cumsum(c: jax.Array) -> jax.Array:
+    """Exclusive int32 cumsum — the segment-offset idiom every ragged
+    layout shares (comm, pipeline)."""
     return jnp.concatenate([jnp.zeros((1,), jnp.int32),
                             jnp.cumsum(c).astype(jnp.int32)])[:-1]
 
@@ -134,7 +136,7 @@ def exchange_counts(send_counts: jax.Array, axes: Axes) -> jax.Array:
 def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
                       *, recv_rows: int, seg_rows: Optional[int] = None,
                       recv_counts: Optional[jax.Array] = None,
-                      emulation: str = "auto"
+                      emulation: str = "auto", allow_truncate: bool = False
                       ) -> Tuple[jax.Array, jax.Array]:
     """All2All of *exact* per-peer row segments — no capacity padding on the
     wire (the SMILE bottleneck fix MegaScale-MoE ships in production).
@@ -177,6 +179,18 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
     Identity when the group size is 1 (``recv = rows`` zero-padded to
     ``recv_rows``).
 
+    ``allow_truncate=True`` permits a ``recv_rows`` bound SMALLER than the
+    worst case: arriving segments whose offsets fall past the bound are
+    truncated (rows simply never materialize) — the mechanism behind the
+    receive-bound factor of :mod:`repro.core.pipeline`.  Both emulations
+    truncate naturally (their compaction indexes past the buffer are
+    dropped); the native op's paired offset/size contract cannot, so a
+    truncating call forces the fused-slab emulation even where
+    ``lax.ragged_all_to_all`` exists (teaching the native path paired
+    clamped sizes is recorded future work).  Callers are responsible for
+    knowing which rows survived — the cumsum of ``recv_counts`` clipped to
+    ``recv_rows``.
+
     The ``REPRO_RAGGED_A2A_EMULATION`` environment variable overrides an
     ``"auto"`` selection (values: ``auto``/``a2a``/``ppermute``) — the
     recoverable escape hatch if a future jax's native op misbehaves (it is
@@ -187,6 +201,18 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
     import os
     if emulation == "auto":
         emulation = os.environ.get("REPRO_RAGGED_A2A_EMULATION", "auto")
+    if emulation == "auto" and allow_truncate:
+        if hasattr(lax, "ragged_all_to_all"):
+            # loud signal: the receive bound currently costs the native
+            # exact-segment wire path (the emulation ships the P x R slab)
+            import warnings
+            warnings.warn(
+                "ragged_all_to_all(allow_truncate=True) forces the "
+                "fused-slab emulation even though this jax has the native "
+                "op — recv_bound_factor trades the exact-segment wire win "
+                "for the bounded compute slab until the native path learns "
+                "paired clamped sizes (see ROADMAP)", stacklevel=2)
+        emulation = "a2a"
     naxes = _norm(axes)
     P = send_counts.shape[0]
     rest = rows.shape[1:]
@@ -195,7 +221,7 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
         n = min(recv_rows, rows.shape[0])
         out = out.at[:n].set(rows[:n])
         return out, send_counts
-    send_off = _excl_cumsum(send_counts)
+    send_off = excl_cumsum(send_counts)
     if emulation == "auto" and hasattr(lax, "ragged_all_to_all"):
         # native path: my segment for peer p lands on p at the offset where
         # p expects MY slice — sum over sources before me of what they send
@@ -215,7 +241,7 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
             axis_name=naxes if len(naxes) > 1 else naxes[0]), recv_counts
     if recv_counts is None:
         recv_counts = exchange_counts(send_counts, naxes)
-    recv_off = _excl_cumsum(recv_counts)
+    recv_off = excl_cumsum(recv_counts)
     R = rows.shape[0]
     S = R if seg_rows is None else min(seg_rows, R)
     ar = jnp.arange(S, dtype=jnp.int32)

@@ -98,5 +98,13 @@ for router in ["switch", "smile"]:
                                        np.asarray(y_pad),
                                        rtol=2e-4, atol=2e-5)
             assert float(df_pad) == 0.0, (router, grid, float(df_pad))
+            # bounded receive slab at a non-clamping factor: BIT-identical
+            # to the unbounded ragged run, still exactly zero drops
+            # (skew-adversarial clamping is covered in _recv_bound.py)
+            cfg_b = dataclasses.replace(cfg, recv_bound_factor=8.0)
+            y_bnd, _, df_bnd = run_dist(cfg_b, params, x)
+            np.testing.assert_array_equal(np.asarray(y_bnd),
+                                          np.asarray(y_dist))
+            assert float(df_bnd) == 0.0, (router, grid, float(df_bnd))
         print(f"OK {router} grid={grid} E={E} k={k} g={g} [{backend}]")
 print("ALL MOE EQUIV OK")

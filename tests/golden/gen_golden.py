@@ -1,0 +1,85 @@
+"""Regenerate the MoE-layer golden fixture (``moe_layer_golden.npz``).
+
+The fixture pins the *exact* (bit-level) outputs of the switch/SMILE layers
+across the full ``dispatch_backend x ragged_a2a x sort_impl`` conformance
+matrix, plus a low-capacity case that exercises the drop path.  It was first
+captured from the pre-pipeline monolithic ``switch_moe``/``smile_moe``
+implementations (PR 4 tree), so the pipeline refactor's golden-equivalence
+test (``tests/test_pipeline_golden.py``) proves the rewrite is a pure
+refactor: bit-identical outputs on every cell.
+
+Bit-level float reproducibility only holds within one (platform, jax
+version) pair — both are recorded in the fixture and the test falls back to
+tight allclose when they differ from the running environment.
+
+    PYTHONPATH=src python tests/golden/gen_golden.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import MoEConfig
+from repro.core import moe as M
+from repro.sharding.plan import single_device_plan
+
+PLAN = single_device_plan()
+BACKENDS = ("sort", "dense", "dropless")
+RAGGED = (True, False)
+SORT_IMPLS = ("argsort", "radix")
+
+# the conformance-suite layer shape (ample capacity, nothing drops) plus a
+# starved-capacity variant that pins the drop bookkeeping bit-exactly
+CASES = {
+    "ample": dict(capacity_factor=8.0),
+    "starved": dict(capacity_factor=1.0),
+}
+
+
+def layer_cfg(router, backend, ragged, sort_impl, capacity_factor):
+    return MoEConfig(num_experts=16, top_k=2, top_g=2, d_ff_expert=32,
+                     capacity_factor=capacity_factor, router=router,
+                     grid=(4, 4), renorm_gates=True,
+                     dispatch_backend=backend, ragged_a2a=ragged,
+                     sort_impl=sort_impl)
+
+
+def main(out_path):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (48, 32))
+    out = {"x": np.asarray(x)}
+    meta = {"jax_version": jax.__version__,
+            "platform": jax.default_backend()}
+    params = {}
+    for router in ("switch", "smile"):
+        cfg0 = layer_cfg(router, "dense", True, "argsort", 8.0)
+        params[router] = M.init_moe_params(key, cfg0, 32, PLAN, glu=False)
+    for router in ("switch", "smile"):
+        for case, kw in CASES.items():
+            for backend in BACKENDS:
+                for ragged in RAGGED:
+                    for simpl in SORT_IMPLS:
+                        cfg = layer_cfg(router, backend, ragged, simpl, **kw)
+                        y, st = M.moe_layer(params[router], x, cfg, PLAN,
+                                            act="gelu")
+                        tag = f"{router}|{case}|{backend}|r{int(ragged)}|{simpl}"
+                        out[f"y|{tag}"] = np.asarray(y)
+                        out[f"s|{tag}"] = np.asarray(
+                            [float(st.lb_loss), float(st.z_loss),
+                             float(st.drop_frac)], np.float64)
+    np.savez_compressed(out_path, __meta__=np.asarray(
+        [meta["jax_version"], meta["platform"]]), **out)
+    print(f"wrote {out_path} ({len(out) - 1} arrays, "
+          f"jax {meta['jax_version']} on {meta['platform']})")
+
+
+if __name__ == "__main__":
+    # optional argv[1]: write elsewhere (e.g. to diff a regeneration against
+    # the checked-in fixture without clobbering it)
+    main(sys.argv[1] if len(sys.argv) > 1 else
+         os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "moe_layer_golden.npz"))

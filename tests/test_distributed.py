@@ -37,6 +37,11 @@ def test_moe_layer_equivalence():
     assert "ALL MOE EQUIV OK" in out
 
 
+def test_recv_bound_factor():
+    out = _run("_recv_bound.py")
+    assert "ALL RECV BOUND OK" in out
+
+
 def test_train_step_equivalence():
     out = _run("_train_equiv.py", timeout=1800)
     assert "ALL TRAIN EQUIV OK" in out
