@@ -11,6 +11,14 @@
 #                           layers) and the options-registry / deprecation-
 #                           shim checks (the targeted gate for dispatch
 #                           and pipeline changes)
+#   ./ci.sh --faults        fault-contained-runtime gate only: the step
+#                           sentinel (skip semantics, spike/non-finite
+#                           verdicts), the hardened checkpoint rotation +
+#                           resume bit-determinism, and the 8-device fault
+#                           containment matrix (every faultinject kind x
+#                           {switch, smile} with exact event/drop
+#                           accounting) — the targeted gate for sentinel,
+#                           checkpoint, and hop-hardening changes
 #
 # The tier-1 suite is the driver-enforced gate; the smoke step additionally
 # compiles and runs one jitted round trip of every dispatch backend
@@ -26,6 +34,14 @@ if [[ "${1:-}" == "--conformance" ]]; then
     python -m pytest -q tests/test_dispatch_conformance.py \
         tests/test_group_sort.py tests/test_pipeline_golden.py
     echo "CI OK (conformance)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--faults" ]]; then
+    echo "== fault-contained runtime gate =="
+    python -m pytest -q tests/test_sentinel.py tests/test_checkpoint.py \
+        tests/test_distributed.py::test_fault_containment
+    echo "CI OK (faults)"
     exit 0
 fi
 

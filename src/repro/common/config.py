@@ -22,14 +22,17 @@ from typing import Any, Optional, Tuple
 
 @dataclass(frozen=True)
 class MoEOption:
-    """One tunable knob of :class:`MoEConfig`.
+    """One tunable knob of :class:`MoEConfig` (also reused as the generic
+    option-registry record for :data:`TRAIN_OPTIONS`).
 
-    ``kind``: ``"choice"`` (string enum), ``"bool"``, or ``"float"``
-    (optional float, None = off).  ``dryrun_opts`` maps ``dryrun --opt``
-    tokens to the value they set (e.g. ``("padded_a2a", False)``); the CLI
-    flag name for ``train.py`` is derived from ``field``.  ``requires``
-    lists (field, value) prerequisites the option is meaningless without —
-    a dryrun token implies them (so ``--opt recv_bound`` alone works), and
+    ``kind``: ``"choice"`` (string enum), ``"bool"``, ``"float"``
+    (optional float, None = off), ``"int"`` (non-negative integer), or
+    ``"str"`` (optional free-form string, None = off).  ``dryrun_opts``
+    maps ``dryrun --opt`` tokens to the value they set (e.g.
+    ``("padded_a2a", False)``); the CLI flag name for ``train.py`` is
+    derived from ``field``.  ``requires`` lists (field, value)
+    prerequisites the option is meaningless without — a dryrun token
+    implies them (so ``--opt recv_bound`` alone works), and
     ``MoEConfig.with_options`` enforces them on the resulting config.
     """
     field: str
@@ -71,9 +74,53 @@ MOE_OPTIONS: Tuple[MoEOption, ...] = (
               help="SMILE: size level-2 capacity from expected valid "
                    "arrivals instead of the padded level-1 buffer",
               dryrun_opts=(("tightcap", True),)),
+    MoEOption("fault_plan", "str",
+              help="deterministic fault injection 'kind[@seed][:hop]' with "
+                   "kind in counts|nanrows|dropseg|skew (see "
+                   "repro.common.faultinject); count faults are inert on "
+                   "padded/local hops; 'off'/None = no injection (the "
+                   "bit-identical production path)",
+              dryrun_opts=(("fault_counts", "counts"),
+                           ("fault_nanrows", "nanrows"),
+                           ("fault_dropseg", "dropseg"),
+                           ("fault_skew", "skew"))),
 )
 
 MOE_OPTION_FIELDS = {o.field: o for o in MOE_OPTIONS}
+
+# =============================================================================
+# Train-loop options registry — same record type, same derivation contract:
+# ``launch/train.py`` generates one CLI flag per entry and ``launch/dryrun``
+# maps the dryrun tokens, so checkpoint/resume/sentinel knobs stay in sync
+# across both launchers exactly like the MoE dispatch knobs do.  Fields that
+# exist on :class:`TrainConfig` (``sentinel``, ``ckpt_every``, ``ckpt_keep``,
+# ``ckpt_dir``) configure it; ``resume`` is a launcher action (auto-pickup of
+# the latest valid checkpoint in ``--ckpt-dir``).
+# =============================================================================
+
+TRAIN_OPTIONS: Tuple[MoEOption, ...] = (
+    MoEOption("sentinel", "bool",
+              help="step sentinel: per-step non-finite / loss-spike verdict "
+                   "inside jit with a lax.cond-guarded optimizer apply that "
+                   "skips bad updates, plus the router-collapse watchdog "
+                   "(see repro.train.sentinel)",
+              dryrun_opts=(("sentinel", True),)),
+    MoEOption("resume", "bool",
+              help="resume from the newest valid checkpoint in --ckpt-dir "
+                   "(digest-verified; falls back to older snapshots on "
+                   "corruption)"),
+    MoEOption("ckpt_every", "int",
+              help="save a rotating checkpoint every N steps (0 = off)"),
+    MoEOption("ckpt_keep", "int",
+              help="checkpoints kept in the keep-last-K rotation"),
+    MoEOption("ckpt_dir", "str",
+              help="run directory for the rotating checkpoints + checksummed "
+                   "manifest"),
+)
+
+TRAIN_OPTION_FIELDS = {o.field: o for o in TRAIN_OPTIONS}
+TRAIN_DRYRUN_OPTS = {tok: {o.field: val}
+                     for o in TRAIN_OPTIONS for tok, val in o.dryrun_opts}
 # dryrun --opt token -> {field: value} with the option's prerequisites
 # merged in (so e.g. "recv_bound" alone implies dropless + ragged hops, the
 # way the old hand-written "dropless" token implied ragged_a2a); tokens not
@@ -141,6 +188,13 @@ class MoEConfig:
     # currently force the fused-slab emulation instead of the native
     # lax.ragged_all_to_all (a trace-time warning fires; see ROADMAP).
     recv_bound_factor: Optional[float] = None
+    # deterministic fault injection: "kind[@seed][:hop]" parsed by
+    # repro.common.faultinject (counts | nanrows | dropseg | skew).  None =
+    # no injection — the executor's fault hooks vanish and the layer is
+    # bit-identical to the pre-harness pipeline (pinned by the golden
+    # matrix).  Count-grid sanitization + fault_events accounting stay
+    # active either way; only the *injection* is gated on this.
+    fault_plan: Optional[str] = None
 
     def with_options(self, **kw) -> "MoEConfig":
         """Rebuild with runtime dispatch options swapped, validated against
@@ -170,6 +224,15 @@ class MoEConfig:
                         or not isinstance(val, (int, float)) or val <= 0):
                     raise ValueError(f"{key}={val!r}: expected a positive "
                                      f"number or None")
+            if opt.kind == "str" and val is not None:
+                if not isinstance(val, str):
+                    raise ValueError(f"{key}={val!r}: expected a string or "
+                                     f"None")
+                if key == "fault_plan":
+                    # fail at config time, not silently mid-run (parse_
+                    # fault_plan raises ValueError on malformed specs)
+                    from repro.common.faultinject import parse_fault_plan
+                    parse_fault_plan(val)
         cfg = dataclasses.replace(self, **kw)
         # registry-declared prerequisites, checked on the RESULT so partial
         # updates can't configure a knob onto a path that ignores it (an
@@ -373,7 +436,12 @@ class TrainConfig:
     seed: int = 0
     log_every: int = 10
     ckpt_every: int = 0
+    ckpt_keep: int = 3                  # keep-last-K checkpoint rotation
     ckpt_dir: str = ""
+    # step sentinel (repro.train.sentinel): skip non-finite / loss-spike
+    # optimizer updates inside jit; False keeps the pre-sentinel step path
+    # verbatim (bit-identical)
+    sentinel: bool = False
 
 
 @dataclass(frozen=True)

@@ -65,6 +65,7 @@ from typing import Callable, Dict, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.common import faultinject as FI
 from repro.core import dispatch as D
 from repro.sharding import comm
 
@@ -90,18 +91,32 @@ class MoEStats:
     outermost hop (switch's flat hop / SMILE level 1), slot 1 SMILE level 2,
     unused slots exactly 0.0 — with one accumulation shape for both routers
     (the executor owns it; the old per-schedule ad-hoc folding is gone).
+
+    Robustness fields (fault-containment PR): ``fault_events`` counts, per
+    hop, the count-grid entries the sanitizer rejected (psum'd over the
+    sync axes — global totals, summed across layers); ``hop_max_load`` /
+    ``hop_load_entropy`` feed the router-collapse watchdog — the global
+    max-load fraction (f-vector max) and normalized load entropy (in
+    [0, 1], 1 = uniform) per hop, accumulated worst-case across layers
+    (max / min respectively; unused hop slots stay at the neutral 0 / 1).
     """
     lb_loss: jax.Array
     z_loss: jax.Array
     # diagnostic: fraction of token-assignments dropped (capacity overflow
-    # on padded hops, receive-bound clamping on bounded ragged hops)
+    # on padded hops, receive-bound clamping on bounded ragged hops,
+    # quarantined/suppressed segments under count faults)
     drop_frac: jax.Array
     hop_drop_frac: jax.Array        # (MAX_HOPS,) per-hop breakdown
+    fault_events: jax.Array         # (MAX_HOPS,) sanitizer rejections
+    hop_max_load: jax.Array         # (MAX_HOPS,) max f-vector entry
+    hop_load_entropy: jax.Array     # (MAX_HOPS,) normalized load entropy
 
 
 def zero_stats() -> MoEStats:
     z = jnp.float32(0.0)
-    return MoEStats(z, z, z, jnp.zeros((MAX_HOPS,), jnp.float32))
+    zv = jnp.zeros((MAX_HOPS,), jnp.float32)
+    return MoEStats(z, z, z, zv, zv,
+                    zv, jnp.ones((MAX_HOPS,), jnp.float32))
 
 
 # =============================================================================
@@ -390,6 +405,44 @@ def recv_bound_rows(factor: float, rows: int, n_ranks: int,
     return min(b, n_ranks * rows)
 
 
+def sanitize_len_grid(len_grid: jax.Array, block: int, src_rows: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Validate an exchanged ``(P, nl)`` count grid; quarantine bad sources.
+
+    The grid arrives over the wire, so the receiver must not trust it: a
+    negative entry or a source whose tile-aligned row total exceeds its
+    ``src_rows`` staging bound would drive the slab layout math (and the
+    fused-emulation compaction gather) out of bounds.  Entries violating
+    either invariant mark their *source row* untrustworthy, and the whole
+    row is zeroed — segment-granularity quarantine, because a partially
+    believed row would shift the group sub-offsets of every later group
+    from that source and silently hand tokens to the wrong expert.  The
+    quarantined source's rows simply never materialize; the echoed reverse
+    hop reports them dropped with exact accounting.
+
+    Returns ``(grid, events)``: the sanitized grid and the number of
+    *violating* entries (a float32 scalar — the hop's ``fault_events``
+    contribution; quarantine collateral, i.e. valid entries zeroed because
+    a sibling violated, is intentionally not counted so injected faults
+    have exact expected counts).  On a healthy grid this is the identity
+    with ``events == 0`` — pure integer math, bit-identical outputs
+    (pinned by the golden matrix).
+
+    Known limitation (ROADMAP): an *in-bounds inflated* count — a source
+    claiming more rows than it actually staged, within its bound — is
+    indistinguishable from a real count without payload checksums; the
+    sanitizer guarantees no OOB/crash/hang, and the step sentinel catches
+    the downstream loss anomaly.
+    """
+    aligned = ((len_grid + block - 1) // block) * block
+    neg = len_grid < 0
+    over = jnp.cumsum(jnp.where(neg, 0, aligned), axis=1) > src_rows
+    bad = neg | over
+    events = bad.sum().astype(jnp.float32)
+    quarantined = bad.any(axis=1, keepdims=True)
+    return jnp.where(quarantined, 0, len_grid), events
+
+
 @dataclasses.dataclass
 class _RaggedHopState:
     """Everything the reverse of one ragged hop needs."""
@@ -403,8 +456,9 @@ class _RaggedHopState:
 
 
 def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
-                    seg_lens: jax.Array, spec: HopSpec, block: int
-                    ) -> _RaggedHopState:
+                    seg_lens: jax.Array, spec: HopSpec, block: int,
+                    fp: Optional[FI.FaultPlan] = None, level: int = 0
+                    ) -> Tuple[_RaggedHopState, jax.Array]:
     """Forward ragged All2All of one dispatch hop — zero capacity padding.
 
     ``rows``: (R, d) *rank-major* ragged layout; ``group_starts``: its
@@ -424,6 +478,17 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
     survives, so surviving segments keep their offsets).  The reverse hop
     (:func:`_ragged_reverse`) echoes the clamped counts back to the
     senders.
+
+    The exchanged count grid is never trusted: :func:`sanitize_len_grid`
+    quarantines sources with invalid counts before any layout math (the
+    identity, and bit-identical, on healthy grids).  Returns the hop state
+    plus the sanitizer's local event count.  ``fp`` optionally injects
+    faults (count poison / segment suppression / NaN slab rows) for this
+    ``level`` — and because a count-targeting plan can legitimately shrink
+    ``rc`` below what the senders shipped, it also forces the clamp-style
+    ``kept`` bookkeeping so the reverse hop echoes the surviving counts
+    instead of assuming everything returns (``fp=None`` keeps the
+    collective-identical zero-echo fast path).
     """
     P, nl = spec.n_ranks, spec.groups_per_rank
     R = rows.shape[0]
@@ -433,8 +498,15 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
     # its own count round trip
     len_grid = comm.all_to_all(seg_lens.reshape(P, nl), spec.axes,
                                split_axis=0, concat_axis=0)
+    inject = fp is not None and fp.targets(level)
+    if inject and fp.kind == "counts":
+        len_grid = FI.corrupt_len_grid(fp, level, len_grid)
+    if inject and fp.kind == "dropseg":
+        len_grid = FI.drop_segment(fp, level, len_grid)
+    len_grid, events = sanitize_len_grid(len_grid, block, R)
     rc = (((len_grid + block - 1) // block) * block).sum(
         axis=1).astype(jnp.int32)
+    force_echo = fp is not None and fp.wants_echo
     factor = spec.recv_bound_factor
     clamped = (factor is not None and P > 1
                and recv_bound_rows(factor, R, P, nl, block) < P * R)
@@ -447,7 +519,15 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
         recv, _ = comm.ragged_all_to_all(rows, send_counts, spec.axes,
                                          recv_rows=B, recv_counts=rc)
         gid, valid = D.ragged_recv_layout(len_grid, block, B)
-        return _RaggedHopState(recv, gid, valid, rc, send_counts, None, R)
+        if inject and fp.kind == "nanrows":
+            recv = FI.nan_rows(fp, level, recv, valid)
+        # under a count-targeting plan, rc can shrink below what peers
+        # shipped: echo the surviving counts (== rc, sum(rc) <= P*R) so
+        # senders learn exactly which rows died instead of reading stale
+        # slab rows back — the quarantine's drop accounting
+        kept = rc if force_echo else None
+        return _RaggedHopState(recv, gid, valid, rc, send_counts,
+                               kept, R), events
     B = recv_bound_rows(factor, R, P, nl, block)
     # bounded slab: segments past B rows are truncated on arrival (the
     # emulations do this natively; allow_truncate keeps the jax-native op
@@ -456,8 +536,11 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
                                      recv_rows=B, recv_counts=rc,
                                      allow_truncate=True)
     gid, valid = D.ragged_recv_layout(len_grid, block, B)
+    if inject and fp.kind == "nanrows":
+        recv = FI.nan_rows(fp, level, recv, valid)
     kept = jnp.clip(B - comm.excl_cumsum(rc), 0, rc)
-    return _RaggedHopState(recv, gid, valid, rc, send_counts, kept, R)
+    return _RaggedHopState(recv, gid, valid, rc, send_counts,
+                           kept, R), events
 
 
 def _ragged_reverse(y_slab: jax.Array, hs: _RaggedHopState, spec: HopSpec
@@ -521,15 +604,32 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
     Returns ``(y, stats)`` with ``y`` (t, d) gate-weighted combined outputs
     and one :class:`MoEStats` accumulated across all hops (lb and z losses
     summed, ``drop_frac`` summed with the per-hop breakdown preserved).
+
+    **Fault containment.**  ``cfg.fault_plan`` (parsed once here) injects
+    deterministic faults at the hop boundaries — count-grid corruption and
+    segment suppression inside :func:`_ragged_forward`, NaN rows into every
+    exchange flavor's post-dispatch buffer, routing-skew storms onto the
+    route decision — while the *always-on* containment machinery
+    (:func:`sanitize_len_grid`, the echoed reverse hop, the occupancy-masked
+    compact FFNs) keeps every faulted step inside a defined state.  The
+    per-hop sanitizer event counts are psum'd into ``stats.fault_events``,
+    and the psum'd LB ``f``-vector feeds the router-collapse watchdog
+    fields ``hop_max_load`` / ``hop_load_entropy`` at zero extra collective
+    cost.  ``fault_plan=None`` is the production path: no injection code
+    traces at all, bit-identical to the golden matrix.
     """
     if len(hops) > MAX_HOPS:
         raise ValueError(f"pipeline has {len(hops)} hops; MAX_HOPS is "
                          f"{MAX_HOPS} (bump it alongside MoEStats)")
     dropless = cfg.dispatch_backend == "dropless"
     simpl = cfg.sort_impl
+    fp = FI.parse_fault_plan(getattr(cfg, "fault_plan", None))
     zero = jnp.float32(0.0)
     lb_terms, z_terms = [], []
     hop_drops = [zero] * MAX_HOPS
+    hop_faults = [zero] * MAX_HOPS
+    hop_maxload = [zero] * MAX_HOPS
+    hop_entropy = [jnp.float32(1.0)] * MAX_HOPS
 
     def run_hop(level: int, x: jax.Array, token_valid: jax.Array,
                 outer_gid: Optional[jax.Array]) -> jax.Array:
@@ -537,9 +637,14 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
         spec = hop.spec
         innermost = level == len(hops) - 1
         dec = hop.route(x, token_valid, outer_gid)
+        if fp is not None and fp.kind == "skew" and fp.targets(level):
+            dec = FI.apply_skew(fp, level, dec, spec.num_groups,
+                                spec.loss_groups)
         A, k = dec.group_ids.shape[0], dec.k
         gid = (dec.group_ids if spec.perm is None
                else jnp.take(spec.perm, dec.group_ids))
+        nanrows_here = (fp is not None and fp.kind == "nanrows"
+                        and fp.targets(level))
 
         # ---- losses (one path per hop) --------------------------------------
         f, p = lb_loss_terms(dec.probs, dec.top1, dec.token_valid,
@@ -547,6 +652,13 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
         lb_terms.append(scaled_lb_loss(f, p, spec.lb_coef))
         z_terms.append(z_loss(dec.logits, dec.token_valid,
                               cfg.router_z_coef, sync))
+        # router-collapse watchdog inputs, from the already-global f-vector:
+        # max-load fraction and normalized load entropy (1 = uniform)
+        hop_maxload[level] = jnp.max(f)
+        if spec.loss_groups > 1:
+            fr = f / jnp.maximum(f.sum(), 1e-9)
+            ent = -jnp.sum(fr * jnp.log(jnp.maximum(fr, 1e-20)))
+            hop_entropy[level] = ent / math.log(spec.loss_groups)
 
         # ---- dispatch + exchange + inner compute + reverse + combine --------
         if spec.exchange == "local":
@@ -555,6 +667,8 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
             rows, starts, st = D.dispatch_ragged(
                 x, gid, dec.gates, spec.num_groups, k=k, valid=dec.valid,
                 use_kernel=use_kernel, sort_impl=simpl)
+            if nanrows_here:
+                rows = FI.nan_rows(fp, level, rows, _occupancy(st, A) > 0)
             out = experts_ffn_ragged(wsel, rows, starts, act, block=st.cap,
                                      use_kernel=use_kernel)
             return D.combine(out, st)               # nothing CAN drop: 0.0
@@ -564,7 +678,9 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
                 x, gid, dec.gates, spec.num_groups, k=k, valid=dec.valid,
                 use_kernel=use_kernel, sort_impl=simpl)
             seg_lens = D.ragged_seg_lens(gid, st.keep, spec.num_groups)
-            hs = _ragged_forward(rows, starts, seg_lens, spec, st.cap)
+            hs, ev = _ragged_forward(rows, starts, seg_lens, spec, st.cap,
+                                     fp=fp, level=level)
+            hop_faults[level] = ev
             if innermost:
                 y_slab = experts_ffn_compact_rows(
                     wsel, hs.recv, hs.gid, hs.valid, spec.groups_per_rank,
@@ -589,6 +705,10 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
                              backend=hop_backend, use_kernel=use_kernel,
                              sort_impl=simpl)
         recv = _fold(buf, spec)                     # (gpr, P*cap, d)
+        if nanrows_here:
+            occ = _fold(_occupancy(st, A), spec) > 0
+            recv = FI.nan_rows(fp, level, recv.reshape(-1, recv.shape[-1]),
+                               occ.reshape(-1)).reshape(recv.shape)
         if innermost:
             if dropless:
                 # fixed-shape A2A retained; FFN only sees valid rows
@@ -613,7 +733,11 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
     t = x.shape[0]
     y = run_hop(0, x, jnp.ones((t,), bool), None)
     hop_vec = jnp.stack(hop_drops)
+    # sanitizer events are per-device local counts -> one stacked psum per
+    # layer makes them global (f-vector stats are already psum'd upstream)
+    fault_vec = comm.psum(jnp.stack(hop_faults), sync)
     stats = MoEStats(sum(lb_terms[1:], lb_terms[0]),
                      sum(z_terms[1:], z_terms[0]),
-                     hop_vec.sum(), hop_vec)
+                     hop_vec.sum(), hop_vec, fault_vec,
+                     jnp.stack(hop_maxload), jnp.stack(hop_entropy))
     return y, stats

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.common.config import INPUT_SHAPES, MOE_DRYRUN_OPTS, TrainConfig
+from repro.common.config import (INPUT_SHAPES, MOE_DRYRUN_OPTS,
+                                 TRAIN_DRYRUN_OPTS, TrainConfig)
 from repro.configs import config_for_shape, supports_shape
 from repro.launch import inputs as I
 from repro.launch.hlo_analysis import analyze_hlo, collective_summary
@@ -84,9 +85,16 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
     pstruct, pspec = I.params_struct(cfg, plan, mesh, dtype=pdtype)
 
     if shape.kind == "train":
+        # train-loop --opt tokens come from the SAME registry contract as
+        # the MoE ones (TRAIN_DRYRUN_OPTS): "sentinel" lowers the guarded
+        # 5-ary step so its mesh cost/memory is measurable like any knob
+        train_kw = {}
+        for tok in sorted(opt_set & TRAIN_DRYRUN_OPTS.keys()):
+            train_kw.update(TRAIN_DRYRUN_OPTS[tok])
+        sentinel = bool(train_kw.get("sentinel", False))
         tcfg = TrainConfig(global_batch_size=shape.global_batch,
                            seq_len=shape.seq_len, micro_batch_size=1,
-                           optimizer="lamb")
+                           optimizer="lamb", sentinel=sentinel)
         opt = make_optimizer("lamb")
         sched = make_schedule("cosine", 3e-4, 100, 10000)
         bstruct, _ = I.train_batch_struct(cfg, shape, plan, mesh)
@@ -107,8 +115,16 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool,
         sstruct = jax.ShapeDtypeStruct((), jnp.int32,
                                        sharding=NamedSharding(mesh, P()))
         step, _ = build_train_step(cfg, tcfg, plan, opt, sched, pstruct,
-                                   bstruct, mesh=mesh, zero1=zero1)
-        lowered = step.lower(pstruct, ostruct, bstruct, sstruct)
+                                   bstruct, mesh=mesh, zero1=zero1,
+                                   sentinel=sentinel)
+        if sentinel:
+            from repro.train.sentinel import init_sentinel_state
+            xstruct = jax.eval_shape(init_sentinel_state)
+            xstruct = I._sds(xstruct, jax.tree.map(lambda _: P(), xstruct),
+                             mesh)
+            lowered = step.lower(pstruct, ostruct, bstruct, sstruct, xstruct)
+        else:
+            lowered = step.lower(pstruct, ostruct, bstruct, sstruct)
     elif shape.kind == "prefill":
         from repro.models.transformer import init_caches
         from repro.sharding.specs import cache_specs
@@ -144,6 +160,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
     mem = compiled.memory_analysis()
     print(mem)
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):        # older jax: list of per-device dicts
+        ca = ca[0] if ca else {}
     print({k: ca.get(k) for k in ("flops", "bytes accessed")})
     hlo = compiled.as_text()
     ndev = 512 if multi_pod else 256
@@ -200,7 +218,8 @@ def main():
     ap.add_argument("--opt", default="",
                     help="comma list: rsc,kvseq,zero1,bf16p,epxpod + the "
                          "registry-derived MoE tokens "
-                         f"({','.join(sorted(MOE_DRYRUN_OPTS))})")
+                         f"({','.join(sorted(MOE_DRYRUN_OPTS))}) + train "
+                         f"tokens ({','.join(sorted(TRAIN_DRYRUN_OPTS))})")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--out", default="experiments/dryrun")

@@ -138,9 +138,15 @@ def _zero_stats() -> MoEStats:
 
 
 def _add_stats(a: MoEStats, b: MoEStats) -> MoEStats:
+    # losses/drops/fault events sum across layers; the watchdog fields keep
+    # the worst layer (max load fraction, min load entropy) — a single
+    # collapsed layer must not be averaged away by healthy siblings
     return MoEStats(a.lb_loss + b.lb_loss, a.z_loss + b.z_loss,
                     a.drop_frac + b.drop_frac,
-                    a.hop_drop_frac + b.hop_drop_frac)
+                    a.hop_drop_frac + b.hop_drop_frac,
+                    a.fault_events + b.fault_events,
+                    jnp.maximum(a.hop_max_load, b.hop_max_load),
+                    jnp.minimum(a.hop_load_entropy, b.hop_load_entropy))
 
 
 def dense_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):

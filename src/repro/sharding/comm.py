@@ -118,6 +118,23 @@ def excl_cumsum(c: jax.Array) -> jax.Array:
                             jnp.cumsum(c).astype(jnp.int32)])[:-1]
 
 
+def _fit_counts(counts: jax.Array, seg_cap: int) -> jax.Array:
+    """Clamp per-peer segment counts into the statically valid range.
+
+    Counts arrive over the wire, so the layout math below must not trust
+    them: the fused emulation's compaction gather reads ``seg * S +
+    within`` — a count beyond the per-segment staging bound ``S`` would
+    silently hand back a *different peer's* rows (no crash, ``jnp.take``
+    clamps, just wrong-expert data), and a negative count corrupts every
+    later peer's cumsum offset.  Semantic validation (and event
+    accounting) lives in ``pipeline.sanitize_len_grid``; this is comm's
+    own belt-and-braces guarantee that NO count value can make the wire
+    primitive read rows it wasn't sent.  Pure integer clip — identity,
+    and bit-identical, on healthy counts.
+    """
+    return jnp.clip(counts, 0, seg_cap)
+
+
 def exchange_counts(send_counts: jax.Array, axes: Axes) -> jax.Array:
     """Tiny int32 All2All: tell every peer how many rows it will receive.
 
@@ -232,6 +249,7 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
         m = lax.all_gather(send_counts, naxes, axis=0, tiled=False)  # (P, P)
         if recv_counts is None:
             recv_counts = jnp.take(m, me, axis=1)
+        recv_counts = _fit_counts(recv_counts, recv_rows)
         out_off = jnp.take(jnp.cumsum(m, axis=0) - m, me, axis=0)
         out = jnp.zeros((recv_rows,) + rest, rows.dtype)
         return lax.ragged_all_to_all(
@@ -241,9 +259,10 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
             axis_name=naxes if len(naxes) > 1 else naxes[0]), recv_counts
     if recv_counts is None:
         recv_counts = exchange_counts(send_counts, naxes)
-    recv_off = excl_cumsum(recv_counts)
     R = rows.shape[0]
     S = R if seg_rows is None else min(seg_rows, R)
+    recv_counts = _fit_counts(recv_counts, S)
+    recv_off = excl_cumsum(recv_counts)
     ar = jnp.arange(S, dtype=jnp.int32)
     bshape = (-1,) + (1,) * len(rest)
     if emulation in ("auto", "a2a"):

@@ -1,5 +1,8 @@
 from repro.train.step import build_train_step, train_step_fn
-from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.checkpoint import (CheckpointError, CheckpointManager,
+                                    load_checkpoint, save_checkpoint)
+from repro.train.sentinel import SentinelState, init_sentinel_state
 
 __all__ = ["build_train_step", "train_step_fn", "save_checkpoint",
-           "load_checkpoint"]
+           "load_checkpoint", "CheckpointError", "CheckpointManager",
+           "SentinelState", "init_sentinel_state"]

@@ -1,17 +1,45 @@
-"""Checkpointing: pytree <-> compressed npz with path-flattened keys.
+"""Checkpointing: pytree <-> compressed npz with path-flattened keys,
+plus the hardened keep-last-K rotation the fault-contained runtime uses.
 
 No orbax dependency (not installed offline). Arrays are gathered to host;
 for multi-device runs call on fully-addressable arrays (the CPU dry-run and
 single-process training used here always are).
+
+**Hardening.**  A checkpoint that cannot be restored is worse than none —
+it is the moment the run is already in trouble.  Three layers:
+
+* :func:`load_checkpoint` raises :class:`CheckpointError` (never a bare
+  ``assert`` — those vanish under ``python -O`` — and never an opaque
+  ``KeyError``) with the offending key, the shape mismatch, or the nearest
+  candidate keys when a flattened name is missing.
+* :class:`CheckpointManager` keeps the last K snapshots under a run
+  directory with a ``manifest.json`` recording each file's SHA-256; saves
+  are atomic (tempfile + ``os.replace``) so a crash mid-save can never
+  clobber the previous good snapshot.
+* :meth:`CheckpointManager.restore_latest` walks the rotation newest-first,
+  rejecting entries whose checksum no longer matches or whose npz fails to
+  load/validate — a corrupt or truncated newest snapshot falls back to the
+  previous good one instead of killing the resume.
 """
 from __future__ import annotations
 
+import difflib
+import hashlib
+import json
 import os
+import re
 import tempfile
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+MANIFEST = "manifest.json"
+_CKPT_RE = re.compile(r"^ckpt_(\d+)\.npz$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file is missing keys, shape-mismatched, or unreadable."""
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -24,12 +52,7 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
-def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    payload = {"__step__": np.int64(step)}
-    payload.update({f"p/{k}": v for k, v in _flatten(params).items()})
-    if opt_state is not None:
-        payload.update({f"o/{k}": v for k, v in _flatten(opt_state).items()})
+def _atomic_write_npz(path: str, payload: Dict[str, Any]):
     # atomic write (savez appends .npz only when missing, so force it)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
                                suffix=".npz")
@@ -38,23 +61,181 @@ def save_checkpoint(path: str, params, opt_state=None, step: int = 0):
     os.replace(tmp, path)
 
 
-def load_checkpoint(path: str, params_like, opt_like=None):
-    """Restore into the structure of ``params_like`` (names must match)."""
-    data = np.load(path, allow_pickle=False)
-    step = int(data["__step__"])
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    extra=None):
+    """Write one snapshot. ``extra`` is an optional pytree of small arrays
+    (e.g. the sentinel carry) stored under the ``x/`` namespace."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {"__step__": np.int64(step)}
+    payload.update({f"p/{k}": v for k, v in _flatten(params).items()})
+    if opt_state is not None:
+        payload.update({f"o/{k}": v for k, v in _flatten(opt_state).items()})
+    if extra is not None:
+        payload.update({f"x/{k}": v for k, v in _flatten(extra).items()})
+    _atomic_write_npz(path, payload)
 
-    def restore(prefix, like):
-        flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
-        leaves = []
-        for pth, leaf in flat_like:
-            key = prefix + "/".join(
-                str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
-                for k in pth)
-            arr = data[key]
-            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
-            leaves.append(arr.astype(leaf.dtype))
-        return jax.tree_util.tree_unflatten(treedef, leaves)
 
-    params = restore("p/", params_like)
-    opt_state = restore("o/", opt_like) if opt_like is not None else None
-    return params, opt_state, step
+def load_checkpoint(path: str, params_like, opt_like=None, extra_like=None):
+    """Restore into the structure of ``params_like`` (names must match).
+
+    Returns ``(params, opt_state, step)`` — or ``(params, opt_state, step,
+    extra)`` when ``extra_like`` is given.  Raises :class:`CheckpointError`
+    on an unreadable file, a missing key (named, with the nearest stored
+    candidates), or a shape mismatch.
+    """
+    try:
+        data = np.load(path, allow_pickle=False)
+    except Exception as e:                      # zipfile/OSError/ValueError
+        raise CheckpointError(f"cannot read checkpoint {path!r}: {e}") from e
+    with data:
+        try:
+            keys = set(data.files)
+            if "__step__" not in keys:
+                raise CheckpointError(
+                    f"checkpoint {path!r} has no '__step__' entry — not a "
+                    f"checkpoint produced by save_checkpoint")
+            step = int(data["__step__"])
+
+            def restore(prefix, like):
+                flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+                leaves = []
+                for pth, leaf in flat_like:
+                    key = prefix + "/".join(
+                        str(getattr(k, "key",
+                                    getattr(k, "idx", getattr(k, "name", k))))
+                        for k in pth)
+                    if key not in keys:
+                        near = difflib.get_close_matches(key, keys, n=3)
+                        hint = f"; nearest stored keys: {near}" if near else ""
+                        raise CheckpointError(
+                            f"checkpoint {path!r} is missing key {key!r}"
+                            f"{hint}")
+                    arr = data[key]
+                    if arr.shape != tuple(leaf.shape):
+                        raise CheckpointError(
+                            f"checkpoint {path!r} key {key!r}: stored shape "
+                            f"{arr.shape} != expected {tuple(leaf.shape)}")
+                    leaves.append(arr.astype(leaf.dtype))
+                return jax.tree_util.tree_unflatten(treedef, leaves)
+
+            params = restore("p/", params_like)
+            opt_state = restore("o/", opt_like) if opt_like is not None else None
+            if extra_like is None:
+                return params, opt_state, step
+            return params, opt_state, step, restore("x/", extra_like)
+        except CheckpointError:
+            raise
+        except Exception as e:                  # truncated member mid-read
+            raise CheckpointError(
+                f"checkpoint {path!r} is corrupt: {e}") from e
+
+
+# =============================================================================
+# Keep-last-K rotation with a checksummed manifest
+# =============================================================================
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+class CheckpointManager:
+    """Rotating checkpoints under one run directory.
+
+    ``save(step, ...)`` writes ``ckpt_<step>.npz``, records its SHA-256 in
+    ``manifest.json`` (both atomically), and prunes beyond ``keep``
+    snapshots.  ``restore_latest(...)`` returns the newest snapshot that
+    passes checksum + structural validation, falling back through the
+    rotation — ``None`` if no valid snapshot exists.  Files present in the
+    directory but absent from the manifest (e.g. hand-copied) are still
+    considered, unverified, after all manifest entries.
+    """
+
+    def __init__(self, directory: str, keep: int = 3):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep}")
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- manifest
+    @property
+    def manifest_path(self) -> str:
+        return os.path.join(self.dir, MANIFEST)
+
+    def _read_manifest(self) -> List[Dict[str, Any]]:
+        try:
+            with open(self.manifest_path) as f:
+                m = json.load(f)
+            entries = m.get("checkpoints", [])
+            return [e for e in entries
+                    if isinstance(e, dict) and "file" in e and "step" in e]
+        except (OSError, ValueError):
+            return []
+
+    def _write_manifest(self, entries: List[Dict[str, Any]]):
+        fd, tmp = tempfile.mkstemp(dir=self.dir, suffix=".json")
+        with os.fdopen(fd, "w") as f:
+            json.dump({"checkpoints": entries}, f, indent=1)
+        os.replace(tmp, self.manifest_path)
+
+    # ----------------------------------------------------------------- save
+    def path_for(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+
+    def save(self, step: int, params, opt_state=None, extra=None) -> str:
+        path = self.path_for(step)
+        save_checkpoint(path, params, opt_state, step, extra=extra)
+        entries = [e for e in self._read_manifest()
+                   if e["file"] != os.path.basename(path)]
+        entries.append({"file": os.path.basename(path), "step": int(step),
+                        "sha256": _sha256(path),
+                        "bytes": os.path.getsize(path)})
+        entries.sort(key=lambda e: e["step"])
+        while len(entries) > self.keep:
+            victim = entries.pop(0)
+            try:
+                os.remove(os.path.join(self.dir, victim["file"]))
+            except OSError:
+                pass
+        self._write_manifest(entries)
+        return path
+
+    # -------------------------------------------------------------- restore
+    def candidates(self) -> List[Tuple[str, Optional[str]]]:
+        """(path, expected_sha256 | None) newest-first: manifest entries
+        first, then unmanifested ckpt_*.npz strays (unverifiable)."""
+        entries = sorted(self._read_manifest(), key=lambda e: -e["step"])
+        out = [(os.path.join(self.dir, e["file"]), e.get("sha256"))
+               for e in entries]
+        known = {p for p, _ in out}
+        strays = []
+        for name in os.listdir(self.dir):
+            m = _CKPT_RE.match(name)
+            p = os.path.join(self.dir, name)
+            if m and p not in known:
+                strays.append((int(m.group(1)), p))
+        out += [(p, None) for _, p in sorted(strays, reverse=True)]
+        return out
+
+    def restore_latest(self, params_like, opt_like=None, extra_like=None,
+                       log=print):
+        """Newest valid snapshot, or ``None``.  Corrupt/mismatched entries
+        are reported via ``log`` and skipped — the fallback walk."""
+        for path, sha in self.candidates():
+            if not os.path.exists(path):
+                continue
+            if sha is not None and _sha256(path) != sha:
+                log(f"checkpoint {path} fails its manifest checksum — "
+                    f"skipping (falling back to previous snapshot)")
+                continue
+            try:
+                return load_checkpoint(path, params_like, opt_like,
+                                       extra_like)
+            except CheckpointError as e:
+                log(f"checkpoint {path} is unrestorable ({e}) — falling "
+                    f"back to previous snapshot")
+        return None

@@ -25,6 +25,7 @@ from repro.models.layers import vocab_parallel_xent
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
 from repro.optim.zero1 import (Zero1State, init_state_shapes, state_specs,
                                zero1_lamb_step)
+from repro.train import sentinel as SEN
 from repro.sharding import comm
 from repro.sharding.compat import shard_map
 from repro.sharding.plan import MeshPlan
@@ -89,16 +90,28 @@ def _ce_loss(params, batch, cfg: ModelConfig, plan: MeshPlan,
     total = ce_mean + stats.lb_loss + stats.z_loss + MTP_LAMBDA * mtp_loss
     metrics = {"ce": ce_mean, "lb": stats.lb_loss, "z": stats.z_loss,
                "mtp": mtp_loss, "drop_frac": stats.drop_frac,
-               "loss": total}
+               "loss": total,
+               # robustness feed: global sanitizer rejections + the
+               # layer-worst router watchdog inputs (see train/sentinel.py)
+               "fault_events": stats.fault_events.sum(),
+               "max_load": jnp.max(stats.hop_max_load),
+               "load_entropy": jnp.min(stats.hop_load_entropy)}
     return total_grad, metrics
 
 
-def train_step_fn(params, opt_state, batch, step, *, cfg: ModelConfig,
-                  tcfg: TrainConfig, plan: MeshPlan, opt: Optimizer,
-                  schedule, sync_axes_tree, norm_axes_tree,
+def train_step_fn(params, opt_state, batch, step, sent=None, *,
+                  cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
+                  opt: Optimizer, schedule, sync_axes_tree, norm_axes_tree,
                   n_micro: int = 1, use_kernel: bool = False,
-                  zero1: bool = False):
-    """One optimizer step (call inside shard_map or on a single device)."""
+                  zero1: bool = False, sentinel: bool = False):
+    """One optimizer step (call inside shard_map or on a single device).
+
+    With ``sentinel=True`` the step takes/returns a fifth value — the
+    :class:`repro.train.sentinel.SentinelState` carry — and the optimizer
+    apply is ``lax.cond``-guarded by the step verdict: a non-finite
+    loss/grad or a loss spike leaves params and opt-state bit-unchanged
+    and bumps the anomaly counters instead (metrics gain ``"skip"``).
+    """
 
     loss = partial(_ce_loss, cfg=cfg, plan=plan, use_kernel=use_kernel)
 
@@ -115,7 +128,8 @@ def train_step_fn(params, opt_state, batch, step, *, cfg: ModelConfig,
             lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
             batch)
         m0 = {k: jnp.float32(0.0) for k in
-              ("ce", "lb", "z", "mtp", "drop_frac", "loss")}
+              ("ce", "lb", "z", "mtp", "drop_frac", "loss",
+               "fault_events", "max_load", "load_entropy")}
         (grads, metrics), _ = jax.lax.scan(micro, (zeros, m0), mb_batch)
         grads = jax.tree.map(lambda g: g / n_micro, grads)
 
@@ -135,25 +149,54 @@ def train_step_fn(params, opt_state, batch, step, *, cfg: ModelConfig,
             is_leaf=lambda x: isinstance(x, jax.Array))
         grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip,
                                            norm_axes_tree)
-        params, opt_state = opt.update(grads, opt_state, params, lr,
-                                       shard_axes=norm_axes_tree)
+        if sentinel:
+            # verdict AFTER grad sync + clip (non-finite values survive
+            # both), BEFORE the moments see anything — the guarded apply
+            # leaves params/opt-state bit-unchanged on a bad step
+            ok, nonfin, spike = SEN.step_verdict(metrics["loss"], grads,
+                                                 sent, plan.all_axes)
+            params, opt_state = SEN.gated_update(
+                ok,
+                lambda g, o, p: opt.update(g, o, p, lr,
+                                           shard_axes=norm_axes_tree),
+                grads, opt_state, params)
+            alarm = SEN.router_alarm(metrics["max_load"],
+                                     metrics["load_entropy"])
+            sent = SEN.update_sentinel(sent, metrics["loss"], ok, nonfin,
+                                       spike, alarm)
+            metrics = dict(metrics)
+            metrics["skip"] = (~ok).astype(jnp.float32)
+        else:
+            params, opt_state = opt.update(grads, opt_state, params, lr,
+                                           shard_axes=norm_axes_tree)
     metrics = dict(metrics)
     metrics["grad_norm"] = gnorm
     metrics["lr"] = lr
+    if sentinel:
+        return params, opt_state, metrics, sent
     return params, opt_state, metrics
 
 
 def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
                      opt: Optimizer, schedule, params_like, batch_like,
                      mesh=None, use_kernel: bool = False,
-                     zero1: bool = False):
+                     zero1: bool = False, sentinel: bool = False):
     """Return a jitted step(params, opt_state, batch, step) for this mesh.
 
     ``params_like`` / ``batch_like`` may be ShapeDtypeStructs (for lowering)
     or real arrays. With ``mesh=None`` the step runs on one device (oracle).
     With ``zero1=True`` optimizer state is sharded over each leaf's
-    replicated axes (init with ``zero1_state(...)``).
+    replicated axes (init with ``zero1_state(...)``).  With
+    ``sentinel=True`` the step is 5-ary — ``step(params, opt_state, batch,
+    step, sent) -> (params, opt_state, metrics, sent)`` where ``sent`` is
+    ``repro.train.sentinel.init_sentinel_state()`` — and bad steps are
+    skipped instead of applied (see ``train_step_fn``).
     """
+    if sentinel and zero1:
+        raise ValueError(
+            "sentinel=True is not supported with zero1=True: the ZeRO-1 "
+            "step fuses clip+apply over owned chunks, so the guarded "
+            "apply cannot wrap it (ROADMAP follow-up)")
     pspec = param_specs(params_like, cfg, plan)
     sync_tree = shard_axes(pspec, plan)
     norm_tree = sharded_axes_only(pspec, plan)
@@ -165,7 +208,7 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
     fn = partial(train_step_fn, cfg=cfg, tcfg=tcfg, plan=plan, opt=opt,
                  schedule=schedule, sync_axes_tree=sync_tree,
                  norm_axes_tree=norm_tree, n_micro=n_micro,
-                 use_kernel=use_kernel, zero1=zero1)
+                 use_kernel=use_kernel, zero1=zero1, sentinel=sentinel)
     if mesh is None:
         return jax.jit(fn, donate_argnums=(0, 1)), pspec
 
@@ -174,11 +217,21 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
     else:
         ospec = {"m": pspec, "v": pspec, "step": P()}
     bspec = batch_specs(batch_like, plan)
-    mspec = {k: P() for k in ("ce", "lb", "z", "mtp", "drop_frac", "loss",
-                              "grad_norm", "lr")}
-    sm = shard_map(fn, mesh=mesh,
-                   in_specs=(pspec, ospec, bspec, P()),
-                   out_specs=(pspec, ospec, mspec))
+    mkeys = ["ce", "lb", "z", "mtp", "drop_frac", "loss", "grad_norm", "lr",
+             "fault_events", "max_load", "load_entropy"]
+    if sentinel:
+        mkeys.append("skip")
+    mspec = {k: P() for k in mkeys}
+    if sentinel:
+        from repro.train.sentinel import init_sentinel_state
+        sspec = jax.tree.map(lambda _: P(), init_sentinel_state())
+        sm = shard_map(fn, mesh=mesh,
+                       in_specs=(pspec, ospec, bspec, P(), sspec),
+                       out_specs=(pspec, ospec, mspec, sspec))
+    else:
+        sm = shard_map(fn, mesh=mesh,
+                       in_specs=(pspec, ospec, bspec, P()),
+                       out_specs=(pspec, ospec, mspec))
     return jax.jit(sm, donate_argnums=(0, 1)), pspec
 
 

@@ -70,7 +70,7 @@ def primitive_skew():
         spec = PL.HopSpec(name="t", axes=plan.ep_axes, n_ranks=P_,
                           num_groups=V, exchange="ragged",
                           recv_bound_factor=factor)
-        hs = PL._ragged_forward(rows, starts, seg_lens, spec, st.cap)
+        hs, ev = PL._ragged_forward(rows, starts, seg_lens, spec, st.cap)
         # marker transform so reverse provenance is checkable
         y_slab = hs.recv * 2.0
         back, ok = PL._ragged_reverse(y_slab, hs, spec)
@@ -78,13 +78,16 @@ def primitive_skew():
         return (back[None], ok[None], hs.kept[None], hs.recv_counts[None],
                 rows[None], nz[None], st.pos[None],
                 jnp.int32(hs.recv.shape[0])[None],
-                jnp.int32(rows.shape[0])[None], jnp.int32(st.cap)[None])
+                jnp.int32(rows.shape[0])[None], jnp.int32(st.cap)[None],
+                ev[None])
 
     fm = jax.jit(shard_map(
         f, mesh=mesh, in_specs=P(("data", "model"), None),
-        out_specs=tuple(P(("data", "model")) for _ in range(10))))
-    (back, ok, kept, rc, rows, nz, pos, b_rows, r_rows, blocks) = map(
+        out_specs=tuple(P(("data", "model")) for _ in range(11))))
+    (back, ok, kept, rc, rows, nz, pos, b_rows, r_rows, blocks, ev) = map(
         np.asarray, fm(x))
+    # the sanitizer must treat these (healthy, merely skewed) grids as clean
+    assert not ev.any(), ev
     B, R, block = int(b_rows[0]), int(r_rows[0]), int(blocks[0])
 
     # static slab bound honored, and genuinely below the worst case

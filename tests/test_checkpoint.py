@@ -1,0 +1,193 @@
+"""Hardened checkpoint/resume tests.
+
+Unit level: real :class:`CheckpointError` diagnostics (missing keys with
+near-match hints, shape mismatch, unreadable files), the ``x/`` extras
+namespace, keep-last-K rotation with a checksummed manifest, and the
+corrupt-newest -> previous-good fallback walk.
+
+End to end (via ``launch.train.train``): a run halted at step N and
+resumed must be BIT-identical to the uninterrupted run — including when
+the newest snapshot is corrupted and resume falls back one snapshot
+(the deterministic data stream replays the lost step exactly).
+"""
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import (CheckpointError, CheckpointManager,
+                                    load_checkpoint, save_checkpoint)
+
+# ---------------------------------------------------------------- unit level
+
+
+def _params():
+    return {"layer": {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+                      "b": np.zeros(3, np.float32)},
+            "head": np.full((4,), 2.5, np.float32)}
+
+
+def test_roundtrip_with_extras(tmp_path):
+    path = str(tmp_path / "c.npz")
+    params = _params()
+    opt = {"m": np.ones((2, 3), np.float32)}
+    extra = {"ema": np.float32(1.5), "n": np.float32(3.0)}
+    save_checkpoint(path, params, opt, step=7, extra=extra)
+    p, o, step, x = load_checkpoint(path, params, opt, extra_like=extra)
+    assert step == 7
+    for got, want in ((p, params), (o, opt), (x, extra)):
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # 3-tuple form without extras
+    p, o, step = load_checkpoint(path, params, opt)
+    assert step == 7 and o is not None
+
+
+def test_missing_key_reports_near_match(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, _params())
+    like = {"layer": {"w_new": np.zeros((2, 3), np.float32)}}
+    with pytest.raises(CheckpointError, match="nearest stored keys"):
+        load_checkpoint(path, like)
+    with pytest.raises(CheckpointError, match="p/layer/w_new"):
+        load_checkpoint(path, like)
+
+
+def test_shape_mismatch(tmp_path):
+    path = str(tmp_path / "c.npz")
+    save_checkpoint(path, _params())
+    like = _params()
+    like["head"] = np.zeros((5,), np.float32)
+    with pytest.raises(CheckpointError, match=r"stored shape \(4,\)"):
+        load_checkpoint(path, like)
+
+
+def test_unreadable_and_foreign_files(tmp_path):
+    junk = tmp_path / "junk.npz"
+    junk.write_bytes(b"this is not a zip archive")
+    with pytest.raises(CheckpointError, match="cannot read"):
+        load_checkpoint(str(junk), _params())
+    # a valid npz that save_checkpoint did not produce
+    foreign = str(tmp_path / "foreign.npz")
+    np.savez(foreign, a=np.zeros(3))
+    with pytest.raises(CheckpointError, match="__step__"):
+        load_checkpoint(foreign, _params())
+
+
+def test_manager_rotation_and_manifest(tmp_path):
+    d = str(tmp_path / "run")
+    mgr = CheckpointManager(d, keep=3)
+    params = _params()
+    for step in (1, 2, 3, 4, 5):
+        p = dict(params, head=params["head"] + step)
+        mgr.save(step, p)
+    files = sorted(f for f in os.listdir(d) if f.endswith(".npz"))
+    assert files == ["ckpt_00000003.npz", "ckpt_00000004.npz",
+                     "ckpt_00000005.npz"]
+    entries = mgr._read_manifest()
+    assert [e["step"] for e in entries] == [3, 4, 5]
+    assert all(e["sha256"] and e["bytes"] > 0 for e in entries)
+    got = mgr.restore_latest(params)
+    assert got is not None
+    p, _, step = got
+    assert step == 5
+    np.testing.assert_array_equal(p["head"], params["head"] + 5)
+
+
+def test_manager_corrupt_newest_falls_back(tmp_path):
+    d = str(tmp_path / "run")
+    mgr = CheckpointManager(d, keep=3)
+    params = _params()
+    for step in (1, 2, 3):
+        mgr.save(step, dict(params, head=params["head"] + step))
+    # truncate the newest snapshot: manifest checksum must reject it
+    newest = mgr.path_for(3)
+    data = open(newest, "rb").read()
+    with open(newest, "wb") as f:
+        f.write(data[: len(data) // 2])
+    msgs = []
+    got = mgr.restore_latest(params, log=msgs.append)
+    assert got is not None
+    p, _, step = got
+    assert step == 2
+    np.testing.assert_array_equal(p["head"], params["head"] + 2)
+    assert any("checksum" in m for m in msgs)
+    # corrupt everything -> None, not an exception
+    for step in (1, 2):
+        with open(mgr.path_for(step), "wb") as f:
+            f.write(b"gone")
+    assert mgr.restore_latest(params, log=msgs.append) is None
+
+
+def test_manager_stray_without_manifest(tmp_path):
+    d = str(tmp_path / "run")
+    mgr = CheckpointManager(d, keep=3)
+    params = _params()
+    mgr.save(4, dict(params, head=params["head"] + 4))
+    os.remove(mgr.manifest_path)        # hand-copied dir, no manifest
+    got = CheckpointManager(d).restore_latest(params)
+    assert got is not None and got[2] == 4
+
+
+# ------------------------------------------------------- end to end (train)
+
+_KW = dict(reduced=True, steps=4, batch=2, seq=16, lr=1e-3, seed=0,
+           log_every=10, sentinel=True)
+
+
+@pytest.fixture(scope="module")
+def train_runs(tmp_path_factory):
+    from repro.launch.train import train
+    root = tmp_path_factory.mktemp("resume")
+    p_full, _ = train("smile-3.7b", **_KW)
+    halted = str(root / "halted")
+    train("smile-3.7b", ckpt_dir=halted, ckpt_every=1, ckpt_keep=3,
+          halt_after=2, **_KW)
+    snaps = sorted(f for f in os.listdir(halted) if f.endswith(".npz"))
+    assert snaps == ["ckpt_00000001.npz", "ckpt_00000002.npz"]
+    return jax.tree.map(np.asarray, p_full), halted, root
+
+
+def _assert_bit_identical(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_resume_is_bit_identical(train_runs, capsys):
+    from repro.launch.train import train
+    p_full, halted, root = train_runs
+    d = str(root / "clean")
+    shutil.copytree(halted, d)
+    p_res, _ = train("smile-3.7b", ckpt_dir=d, ckpt_every=1, ckpt_keep=3,
+                     resume=True, **_KW)
+    assert "resumed from step 2" in capsys.readouterr().out
+    _assert_bit_identical(p_res, p_full)
+
+
+def test_resume_falls_back_past_corrupt_snapshot(train_runs, capsys):
+    """Corrupt the newest snapshot: resume restores step 1 instead, the
+    deterministic data stream replays step 2, and the final params are
+    STILL bit-identical to the uninterrupted run."""
+    from repro.launch.train import train
+    p_full, halted, root = train_runs
+    d = str(root / "corrupt")
+    shutil.copytree(halted, d)
+    victim = os.path.join(d, "ckpt_00000002.npz")
+    data = open(victim, "rb").read()
+    with open(victim, "wb") as f:
+        f.write(data[: len(data) // 2])
+    p_res, _ = train("smile-3.7b", ckpt_dir=d, ckpt_every=1, ckpt_keep=3,
+                     resume=True, **_KW)
+    out = capsys.readouterr().out
+    assert "checksum" in out and "resumed from step 1" in out
+    _assert_bit_identical(p_res, p_full)
+
+
+def test_resume_requires_ckpt_dir():
+    from repro.launch.train import train
+    with pytest.raises(ValueError, match="ckpt-dir"):
+        train("smile-3.7b", resume=True, **_KW)

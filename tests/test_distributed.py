@@ -55,3 +55,8 @@ def test_decode_equivalence():
 def test_zero1_equivalence():
     out = _run("_zero1_equiv.py", timeout=1800)
     assert "ZERO1 EQUIV OK" in out
+
+
+def test_fault_containment():
+    out = _run("_faults.py", timeout=1800)
+    assert "ALL FAULT CONTAINMENT OK" in out

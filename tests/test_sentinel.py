@@ -1,0 +1,152 @@
+"""Step-sentinel tests: verdicts, the guarded apply, and end-to-end
+containment — a NaN-poisoned MoE layer (fault_plan=nanrows) must leave
+params and optimizer state BIT-unchanged through a sentinel step, while
+the sentinel-off and healthy-sentinel paths keep training normally."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import sentinel as S
+
+# ---------------------------------------------------------------- unit level
+
+
+def test_step_verdict_flags():
+    sent = S.init_sentinel_state()
+    g = {"w": jnp.ones((4,)), "b": jnp.zeros((2,))}
+    ok, nf, sp = S.step_verdict(jnp.float32(1.0), g, sent, ())
+    assert bool(ok) and not bool(nf) and not bool(sp)
+    ok, nf, _ = S.step_verdict(jnp.float32(np.nan), g, sent, ())
+    assert not bool(ok) and bool(nf)
+    bad = {"w": jnp.ones((4,)).at[2].set(np.inf), "b": jnp.zeros((2,))}
+    ok, nf, _ = S.step_verdict(jnp.float32(1.0), bad, sent, ())
+    assert not bool(ok) and bool(nf)
+    # int leaves (e.g. step counters riding a tree) never trip the check
+    ok, _, _ = S.step_verdict(jnp.float32(1.0),
+                              {"n": jnp.int32(7)}, sent, ())
+    assert bool(ok)
+
+
+def test_spike_detector_arms_after_warmup():
+    sent = S.init_sentinel_state()
+    g = {"w": jnp.ones((2,))}
+    # before warmup: a huge loss is NOT a spike (no baseline yet)
+    ok, _, sp = S.step_verdict(jnp.float32(1e9), g, sent, ())
+    assert bool(ok) and not bool(sp)
+    for _ in range(S.WARMUP_STEPS):
+        ok, nf, sp = S.step_verdict(jnp.float32(2.0), g, sent, ())
+        sent = S.update_sentinel(sent, jnp.float32(2.0), ok, nf, sp,
+                                 jnp.bool_(False))
+    assert float(sent.loss_ema) == pytest.approx(2.0)
+    ok, nf, sp = S.step_verdict(jnp.float32(2.0 * S.SPIKE_FACTOR + 1.0),
+                                g, sent, ())
+    assert not bool(ok) and bool(sp) and not bool(nf)
+    # the rejected spike must not raise its own baseline
+    sent2 = S.update_sentinel(sent, jnp.float32(1e6), ok, nf, sp,
+                              jnp.bool_(False))
+    assert float(sent2.loss_ema) == float(sent.loss_ema)
+    assert float(sent2.skipped) == 1.0 and float(sent2.spikes) == 1.0
+
+
+def test_router_alarm_thresholds():
+    t = jnp.float32
+    assert bool(S.router_alarm(t(0.95), t(0.8)))     # load concentration
+    assert bool(S.router_alarm(t(0.3), t(0.01)))     # entropy collapse
+    assert not bool(S.router_alarm(t(0.3), t(0.9)))  # healthy
+
+
+def test_gated_update_identity_on_bad_step():
+    params = {"w": jnp.arange(4.0)}
+    opt_state = {"m": jnp.ones((4,))}
+    grads = {"w": jnp.full((4,), 2.0)}
+    upd = lambda g, o, p: ({"w": p["w"] - g["w"]}, {"m": o["m"] + 1})
+    p1, o1 = S.gated_update(jnp.bool_(True), upd, grads, opt_state, params)
+    np.testing.assert_array_equal(np.asarray(p1["w"]),
+                                  np.arange(4.0) - 2.0)
+    p0, o0 = S.gated_update(jnp.bool_(False), upd, grads, opt_state, params)
+    np.testing.assert_array_equal(np.asarray(p0["w"]), np.arange(4.0))
+    np.testing.assert_array_equal(np.asarray(o0["m"]), np.ones((4,)))
+
+
+# ------------------------------------------------------------- end to end
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    from repro.configs import get_reduced
+    from repro.data.pipeline import DataPipeline
+    from repro.models.transformer import init_model
+    from repro.optim import make_optimizer, make_schedule
+    from repro.sharding.plan import single_device_plan
+    cfg = get_reduced("smile-3.7b")
+    plan = single_device_plan()
+    params = init_model(jax.random.PRNGKey(0), cfg, plan)
+    pipe = DataPipeline(cfg, 2, 16, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in next(pipe).items()}
+    pipe.close()
+    opt = make_optimizer("lamb")
+    sched = make_schedule("cosine", 3e-4, 2, 10)
+    return cfg, plan, params, batch, opt, sched
+
+
+def _build(cfg, plan, params, batch, opt, sched, sentinel):
+    from repro.common.config import TrainConfig
+    from repro.train.step import build_train_step
+    tcfg = TrainConfig(global_batch_size=2, seq_len=16, steps=10,
+                       optimizer="lamb", sentinel=sentinel)
+    fn, _ = build_train_step(cfg, tcfg, plan, opt, sched, params, batch,
+                             mesh=None, sentinel=sentinel)
+    return fn
+
+
+def _tree_equal(a, b):
+    return all(bool((np.asarray(x) == np.asarray(y)).all())
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _fresh(tree):
+    # the jitted step donates params/opt_state — every call needs its own
+    return jax.tree.map(lambda x: jnp.array(np.asarray(x)), tree)
+
+
+def test_sentinel_step_healthy_and_poisoned(tiny_setup):
+    """Healthy step: identical params to the sentinel-off step, skip=0.
+    NaN-poisoned MoE (fault_plan=nanrows): loss goes NaN, the update is
+    skipped, params AND opt state are bit-unchanged, counters bump."""
+    cfg, plan, params, batch, opt, sched = tiny_setup
+    opt_state = opt.init(params)
+    p0 = jax.tree.map(np.asarray, params)        # pre-donation snapshots
+    o0 = jax.tree.map(np.asarray, opt_state)
+    step_off = _build(cfg, plan, params, batch, opt, sched, sentinel=False)
+    step_on = _build(cfg, plan, params, batch, opt, sched, sentinel=True)
+    sent = S.init_sentinel_state()
+
+    p_off, o_off, m_off = step_off(_fresh(p0), _fresh(o0), batch,
+                                   jnp.int32(1))
+    p_on, o_on, m_on, sent1 = step_on(_fresh(p0), _fresh(o0), batch,
+                                      jnp.int32(1), sent)
+    assert float(m_on["skip"]) == 0.0
+    assert _tree_equal(p_off, p_on) and _tree_equal(o_off, o_on)
+    assert float(sent1.steps) == 1.0 and float(sent1.skipped) == 0.0
+    assert "fault_events" in m_off and float(m_off["fault_events"]) == 0.0
+
+    # poison every MoE layer's receive slab -> NaN loss -> skipped update
+    cfg_bad = cfg.replace(moe=cfg.moe.with_options(fault_plan="nanrows"))
+    step_bad = _build(cfg_bad, plan, params, batch, opt, sched,
+                      sentinel=True)
+    p_b, o_b, m_b, sent2 = step_bad(_fresh(p0), _fresh(o0), batch,
+                                    jnp.int32(1), sent)
+    assert not np.isfinite(float(m_b["loss"]))
+    assert float(m_b["skip"]) == 1.0
+    assert _tree_equal(p_b, p0) and _tree_equal(o_b, o0)
+    assert float(sent2.nonfinite) == 1.0 and float(sent2.skipped) == 1.0
+    # the EMA ignored the poisoned step
+    assert float(sent2.ema_steps) == 0.0
+
+
+def test_sentinel_zero1_unsupported(tiny_setup):
+    cfg, plan, params, batch, opt, sched = tiny_setup
+    with pytest.raises(ValueError, match="zero1"):
+        _ = __import__("repro.train.step", fromlist=["build_train_step"]) \
+            .build_train_step(cfg, None, plan, opt, sched, params, batch,
+                              zero1=True, sentinel=True)
