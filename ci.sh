@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Executable verify recipe (ROADMAP "Tier-1 verify" + benchmark smoke).
 #
-#   ./ci.sh                 tier-1 test suite, then the benchmark smoke subset
-#   ./ci.sh --fast          tier-1 test suite only
+#   ./ci.sh                 static analyzer, tier-1 test suite, then the
+#                           benchmark smoke subset
+#   ./ci.sh --fast          static analyzer + tier-1 test suite only
 #   ./ci.sh --conformance   dispatch conformance matrix only: every
 #                           dispatch_backend x ragged_a2a x sort_impl cell
 #                           vs the dense oracle + the group-sort property
@@ -11,6 +12,16 @@
 #                           layers) and the options-registry / deprecation-
 #                           shim checks (the targeted gate for dispatch
 #                           and pipeline changes)
+#   ./ci.sh --static        static analyzer only: trace-time SPMD/collective
+#                           invariants over the entrypoint grid (cond branch
+#                           congruence, axis names, int32 count boundaries,
+#                           comm.py provenance), the Pallas kernel lint
+#                           (VMEM budget, tile alignment, index-map bounds,
+#                           dimension_semantics grid races) and the AST repo
+#                           lint (options registry, kernel ops/ref twins,
+#                           rogue lax collectives) — exits nonzero on any
+#                           finding (the targeted gate for kernel, comm,
+#                           and config-surface changes)
 #   ./ci.sh --faults        fault-contained-runtime gate only: the step
 #                           sentinel (skip semantics, spike/non-finite
 #                           verdicts), the hardened checkpoint rotation +
@@ -37,6 +48,13 @@ if [[ "${1:-}" == "--conformance" ]]; then
     exit 0
 fi
 
+if [[ "${1:-}" == "--static" ]]; then
+    echo "== static analyzer =="
+    python -m repro.launch.analyze
+    echo "CI OK (static)"
+    exit 0
+fi
+
 if [[ "${1:-}" == "--faults" ]]; then
     echo "== fault-contained runtime gate =="
     python -m pytest -q tests/test_sentinel.py tests/test_checkpoint.py \
@@ -51,6 +69,9 @@ if git ls-files '*.pyc' | grep -q .; then
     git ls-files '*.pyc' >&2
     exit 1
 fi
+
+echo "== static analyzer =="
+python -m repro.launch.analyze -q
 
 echo "== tier-1 test suite =="
 python -m pytest -x -q

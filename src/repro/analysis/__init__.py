@@ -1,0 +1,103 @@
+"""Static analysis: trace-time SPMD/collective invariants + Pallas lint.
+
+**Why a static analyzer.**  PR 6 made the runtime fault-contained, but its
+hardest bug class — an SPMD hazard such as a collective appearing in only
+one branch of a ``lax.cond``-gated optimizer apply, or a psum axis-set
+mismatch between a verdict and the grad sync — is only caught
+*dynamically*, if a test happens to hit the deadlock/wrong-value path.
+Communication-schedule correctness is exactly what production MoE training
+lives or dies on at scale (MegaScale-MoE), and the roadmap's next tentpoles
+(fused routing megakernel, micro-chunked comm/compute overlap) add more
+Pallas kernels and more collective choreography.  This package checks those
+invariants at *trace time*, over closed jaxprs and kernel BlockSpecs, with
+no devices beyond the fake-CPU mesh and no execution of the traced code.
+
+**Architecture.**  Three independent passes, one driver:
+
+* :mod:`repro.analysis.jaxpr_lint` — traces the registered entrypoint grid
+  (both routers x every dispatch backend x ragged/padded wire x the train
+  step with the sentinel on/off, shapes derived from ``repro.configs``)
+  through ``shard_map`` on an 8-fake-device mesh to closed jaxprs, then
+  verifies SPMD invariants on the result:
+
+  - **cond-branch congruence** — every ``lax.cond`` executes an *identical*
+    collective sequence (primitive, axis names, operand shapes, order) in
+    all branches.  A mesh-uniform predicate makes asymmetric branches safe
+    (the sentinel's gated apply relies on this), so the rule is waived for
+    conds lowered through :func:`repro.sharding.comm.uniform_cond` — the
+    one blessed place that asserts the uniformity contract in its docs.
+  - **axis-name consistency** — every collective's axis names are a subset
+    of the mesh's axis names.
+  - **int32 collective boundaries** — integer operands of collectives
+    (count grids) must be exactly int32: silent x64 promotion doubles
+    count-exchange bytes and breaks the native ragged-A2A offset contract.
+  - **collective provenance** — no collective primitive is introduced
+    outside code lowered from :mod:`repro.sharding.comm` (the repo's one
+    blessed collective module; everything else must call through it).
+
+* :mod:`repro.analysis.pallas_lint` — traces each kernel wrapper in
+  ``repro.kernels`` at representative static shapes and checks every
+  ``pallas_call`` equation:
+
+  - **VMEM footprint** — ~2x (double-buffered) sum of per-grid-step block
+    bytes + scratch bytes against a configurable budget;
+  - **tile alignment** — (sublane, 128)-style alignment of the trailing two
+    block dims by dtype (full-dim and size-1 blocks are exempt);
+  - **index-map bounds** — grid-only index maps are evaluated over the
+    (corner-sampled) grid and flagged if any block index falls outside the
+    padded operand bounds (scalar-prefetch-dependent maps are runtime
+    contracts and are skipped);
+  - **grid races** — an output revisited along a grid axis (its index map
+    constant in that axis) or VMEM scratch carried across the grid requires
+    explicit ``dimension_semantics`` with that axis ``"arbitrary"``
+    (sequential); missing or contradicting annotations are findings.
+
+* :mod:`repro.analysis.repo_lint` — AST-level repo invariants, no tracing:
+  every non-structural ``MoEConfig``/``TrainConfig`` knob is registered in
+  ``MOE_OPTIONS``/``TRAIN_OPTIONS`` (and vice versa), every public Pallas
+  kernel has an ``ops.py`` wrapper and a ``ref.py`` oracle twin, and no
+  direct ``lax.<collective>`` call site exists outside
+  ``sharding/comm.py``.
+
+* :mod:`repro.launch.analyze` — the CLI driver
+  (``python -m repro.launch.analyze``): runs all passes over the entrypoint
+  grid, prints per-finding reports with file:line provenance, and exits
+  nonzero on any finding.  Wired into ``./ci.sh --static`` (part of the
+  default CI run).
+
+Each pass returns a flat list of :class:`Finding`; passes never raise on
+bad code — a finding is data, so seeded-bad fixtures
+(``tests/test_analysis.py``) can assert exact rule hits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+__all__ = ["Finding", "format_findings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer finding: which pass, which rule, where, and why."""
+
+    pass_name: str                 # "jaxpr" | "pallas" | "repo"
+    rule: str                      # stable rule id (kebab-case)
+    message: str
+    file: Optional[str] = None     # provenance when recoverable
+    line: Optional[int] = None
+
+    def format(self) -> str:
+        loc = ""
+        if self.file:
+            loc = f" ({self.file}:{self.line})" if self.line else f" ({self.file})"
+        return f"[{self.pass_name}] {self.rule}: {self.message}{loc}"
+
+
+def format_findings(findings: Sequence[Finding]) -> str:
+    """Render a finding list as the per-line report the CLI prints."""
+    if not findings:
+        return "no findings"
+    lines: List[str] = [f.format() for f in findings]
+    lines.append(f"{len(findings)} finding(s)")
+    return "\n".join(lines)

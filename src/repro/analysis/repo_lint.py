@@ -1,0 +1,232 @@
+"""AST-level repo invariants — no tracing, no jax import required.
+
+Three rules, each over the repo source tree:
+
+* ``unregistered-config-knob`` / ``registry-orphan`` — every runtime-
+  tunable field of ``MoEConfig``/``TrainConfig`` must be registered in
+  ``MOE_OPTIONS``/``TRAIN_OPTIONS`` (the registries both launchers derive
+  their flags from — an unregistered knob is unreachable from every entry
+  point), and every registry entry must name a real config field.
+  Structural fields (architecture shape, loss coefficients) are
+  whitelisted; ``resume`` is a launcher action without a config field.
+* ``kernel-missing-wrapper`` / ``kernel-missing-ref`` — every public
+  ``*_pallas`` kernel must be wrapped in ``kernels/ops.py`` (the
+  interpret-mode/backend selection layer every caller goes through) and
+  have a ``*_ref`` oracle twin in ``kernels/ref.py`` (what the conformance
+  suite diffs it against).
+* ``rogue-collective`` — no direct ``lax.<collective>`` call site outside
+  ``sharding/comm.py``: comm is the single module allowed to issue wire
+  primitives (this is the static twin of jaxpr_lint's trace-time
+  provenance rule, and catches code the entrypoint grid doesn't reach).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis import Finding
+
+# MoEConfig fields that are architecture structure, not runtime knobs:
+# changing them changes the model, so they are launched via configs/, not
+# via the options registry.
+MOE_STRUCTURAL = frozenset({
+    "num_experts", "top_k", "top_g", "renorm_gates", "d_ff_expert",
+    "num_shared_experts", "capacity_factor", "router", "lb_alpha",
+    "lb_beta", "router_z_coef", "every_n_layers", "first_dense_layers",
+    "grid",
+})
+
+# TrainConfig fields that are training-run structure (batch/optimizer/
+# schedule shape), not launcher-registry knobs.
+TRAIN_STRUCTURAL = frozenset({
+    "global_batch_size", "micro_batch_size", "seq_len", "steps",
+    "optimizer", "lr", "warmup_steps", "weight_decay", "grad_clip", "eps",
+    "b1", "b2", "schedule", "mlm_mask_prob", "seed", "log_every",
+})
+
+# Registry entries that are launcher actions, not config fields.
+LAUNCHER_ONLY = frozenset({"resume"})
+
+# lax primitives that move bytes between devices.
+COLLECTIVE_CALLS = frozenset({
+    "psum", "pmean", "pmax", "pmin", "all_gather", "psum_scatter",
+    "all_to_all", "ppermute", "pshuffle", "ragged_all_to_all",
+})
+
+
+def _parse(path: str) -> Optional[ast.Module]:
+    try:
+        with open(path, "r") as f:
+            return ast.parse(f.read(), filename=path)
+    except (OSError, SyntaxError):
+        return None
+
+
+def _dataclass_fields(tree: ast.Module, cls_name: str) -> Set[str]:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == cls_name:
+            return {st.target.id for st in node.body
+                    if isinstance(st, ast.AnnAssign)
+                    and isinstance(st.target, ast.Name)}
+    return set()
+
+
+def _registry_fields(tree: ast.Module, registry_name: str) -> Set[str]:
+    """First-arg strings of MoEOption(...) calls in a registry tuple."""
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.AnnAssign)
+                and isinstance(node.target, ast.Name)
+                and node.target.id == registry_name):
+            out = set()
+            for call in ast.walk(node):
+                if (isinstance(call, ast.Call) and call.args
+                        and isinstance(call.args[0], ast.Constant)
+                        and isinstance(call.args[0].value, str)):
+                    out.add(call.args[0].value)
+            return out
+    return set()
+
+
+def check_config_registry(config_path: str) -> List[Finding]:
+    """Two-way check: config fields <-> options-registry entries."""
+    tree = _parse(config_path)
+    if tree is None:
+        return [Finding("repo", "parse-error",
+                        f"cannot parse {config_path}", config_path)]
+    findings: List[Finding] = []
+    for cls, registry, structural in (
+            ("MoEConfig", "MOE_OPTIONS", MOE_STRUCTURAL),
+            ("TrainConfig", "TRAIN_OPTIONS", TRAIN_STRUCTURAL)):
+        fields = _dataclass_fields(tree, cls)
+        registered = _registry_fields(tree, registry)
+        if not fields or not registered:
+            findings.append(Finding(
+                "repo", "parse-error",
+                f"could not locate {cls} fields or {registry} entries in "
+                f"{config_path}", config_path))
+            continue
+        for f in sorted(fields - registered - structural):
+            findings.append(Finding(
+                "repo", "unregistered-config-knob",
+                f"{cls}.{f} is neither registered in {registry} nor in the "
+                f"structural whitelist — an unregistered knob is "
+                f"unreachable from both launchers (register it, or add it "
+                f"to {'MOE' if cls == 'MoEConfig' else 'TRAIN'}_STRUCTURAL "
+                f"in repro.analysis.repo_lint if it is model structure)",
+                config_path))
+        for f in sorted(registered - fields - LAUNCHER_ONLY):
+            findings.append(Finding(
+                "repo", "registry-orphan",
+                f"{registry} registers {f!r} but {cls} has no such field",
+                config_path))
+    return findings
+
+
+def _public_pallas_defs(path: str) -> List[Tuple[str, int]]:
+    tree = _parse(path)
+    if tree is None:
+        return []
+    return [(node.name, node.lineno) for node in tree.body
+            if isinstance(node, ast.FunctionDef)
+            and node.name.endswith("_pallas")
+            and not node.name.startswith("_")]
+
+
+def check_kernel_twins(kernels_dir: str,
+                       ops_path: Optional[str] = None,
+                       ref_path: Optional[str] = None) -> List[Finding]:
+    """Every public ``*_pallas`` kernel is wrapped in ops.py with a ref twin."""
+    ops_path = ops_path or os.path.join(kernels_dir, "ops.py")
+    ref_path = ref_path or os.path.join(kernels_dir, "ref.py")
+    findings: List[Finding] = []
+    try:
+        with open(ops_path) as f:
+            ops_src = f.read()
+    except OSError:
+        return [Finding("repo", "parse-error", f"missing {ops_path}",
+                        ops_path)]
+    ref_tree = _parse(ref_path)
+    ref_defs = ({node.name for node in ast.walk(ref_tree)
+                 if isinstance(node, ast.FunctionDef)}
+                if ref_tree is not None else set())
+    for fname in sorted(os.listdir(kernels_dir)):
+        if not fname.endswith(".py") or fname in ("ops.py", "ref.py",
+                                                  "__init__.py"):
+            continue
+        path = os.path.join(kernels_dir, fname)
+        for name, lineno in _public_pallas_defs(path):
+            if name not in ops_src:
+                findings.append(Finding(
+                    "repo", "kernel-missing-wrapper",
+                    f"{name} has no wrapper call site in kernels/ops.py — "
+                    f"every Pallas kernel must go through the ops layer "
+                    f"(interpret-mode fallback + backend selection)",
+                    path, lineno))
+            twin = name[: -len("_pallas")] + "_ref"
+            if twin not in ref_defs:
+                findings.append(Finding(
+                    "repo", "kernel-missing-ref",
+                    f"{name} has no {twin} oracle twin in kernels/ref.py — "
+                    f"the conformance suite needs a pure-jnp reference for "
+                    f"every kernel", path, lineno))
+    return findings
+
+
+def _is_lax_attr(node: ast.AST) -> bool:
+    """True for ``lax.X`` / ``jax.lax.X`` attribute chains."""
+    if not isinstance(node, ast.Attribute):
+        return False
+    v = node.value
+    if isinstance(v, ast.Name):
+        return v.id == "lax"
+    if isinstance(v, ast.Attribute):
+        return v.attr == "lax"
+    return False
+
+
+def check_collective_callsites(paths: Iterable[str],
+                               allow_suffix: str = "sharding/comm.py"
+                               ) -> List[Finding]:
+    """No direct ``lax.<collective>`` call outside sharding/comm.py."""
+    findings: List[Finding] = []
+    for path in paths:
+        if path.replace(os.sep, "/").endswith(allow_suffix):
+            continue
+        tree = _parse(path)
+        if tree is None:
+            continue
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call) and _is_lax_attr(node.func)
+                    and node.func.attr in COLLECTIVE_CALLS):
+                findings.append(Finding(
+                    "repo", "rogue-collective",
+                    f"direct lax.{node.func.attr} call outside "
+                    f"sharding/comm.py — route it through the comm helpers "
+                    f"(oracle identity on empty axes, remat save-policy "
+                    f"tagging, analyzer provenance)", path, node.lineno))
+    return findings
+
+
+def _py_files(root: str) -> List[str]:
+    out = []
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in sorted(filenames):
+            if fn.endswith(".py"):
+                out.append(os.path.join(dirpath, fn))
+    return out
+
+
+def run(src_root: Optional[str] = None, log=None) -> List[Finding]:
+    """All repo rules over the live source tree."""
+    if src_root is None:
+        src_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    config_path = os.path.join(src_root, "common", "config.py")
+    kernels_dir = os.path.join(src_root, "kernels")
+    findings = check_config_registry(config_path)
+    findings += check_kernel_twins(kernels_dir)
+    findings += check_collective_callsites(_py_files(src_root))
+    if log:
+        log(f"  repo: {len(_py_files(src_root))} files scanned, "
+            f"{len(findings)} finding(s)")
+    return findings

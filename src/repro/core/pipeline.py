@@ -495,7 +495,10 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
     send_counts = D.ragged_send_counts(group_starts, nl)
     # one count collective per hop: the (P, nl) length grid also determines
     # the aligned per-source segment extents, so the segment exchange skips
-    # its own count round trip
+    # its own count round trip.  This boundary rides the generic payload
+    # all_to_all (which comm cannot dtype-gate), so the count contract is
+    # asserted here.
+    comm.assert_count_i32(seg_lens, "_ragged_forward(seg_lens)")
     len_grid = comm.all_to_all(seg_lens.reshape(P, nl), spec.axes,
                                split_axis=0, concat_axis=0)
     inject = fp is not None and fp.targets(level)

@@ -16,6 +16,7 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, scale: float):
@@ -78,6 +79,10 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
             pl.BlockSpec((1, 1, T, hd), lambda b, h, i: (b, h, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+        # online-softmax state lives in kernel-local accumulators within one
+        # grid step; no output or scratch crosses grid steps
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
         interpret=interpret,
     )(qt, kt, vt)
     return out.transpose(0, 2, 1, 3)

@@ -136,6 +136,10 @@ def grouped_ffn_pallas(x: jax.Array, w1: jax.Array, w3, w2: jax.Array,
         grid=grid,
         in_specs=in_specs,
         out_specs=o_spec,
+        # the output block accumulates over the f axis (innermost): that
+        # axis is sequential; group and row-tile axes are independent
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*args)
     return out[:, :T]
@@ -186,6 +190,10 @@ def grouped_ffn_ragged_pallas(rows: jax.Array, tile_gid: jax.Array,
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_tiles, bt, d), rows.dtype),
+        # each row tile's output accumulates over the f axis (innermost):
+        # sequential; row tiles are independent
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(tile_gid.astype(jnp.int32), *args)
     return out.reshape(R, d)

@@ -63,6 +63,9 @@ def dispatch_gather_pallas(x: jax.Array, src: jax.Array, *,
         _dispatch_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        # pure gather: every destination row is written exactly once
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(src, x)
 
@@ -107,5 +110,9 @@ def combine_gather_pallas(rows: jax.Array, src: jax.Array, scale: jax.Array,
         _combine_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((t, d), rows.dtype),
+        # the k axis accumulates into the scratch tile: sequential; token
+        # tiles are independent
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(src, scale, rows)

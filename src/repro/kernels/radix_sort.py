@@ -154,6 +154,10 @@ def group_sort_pallas(keys: jax.Array, num_keys: int, *,
         out_shape=[jax.ShapeDtypeStruct((n_tiles, bt), jnp.int32),
                    jax.ShapeDtypeStruct((1, D), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((1, D), jnp.int32)],
+        # the running histogram (scratch + revisited hist output) is
+        # carried across the tile axis: it must execute sequentially
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(kp.reshape(n_tiles, bt))
     # pad-sentinel counts live at hist[num_keys] and are excluded by

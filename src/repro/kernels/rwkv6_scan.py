@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref):
@@ -58,6 +59,10 @@ def rwkv6_scan_pallas(r: jax.Array, k: jax.Array, v: jax.Array,
                   pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0))],
         out_specs=(seq_spec,
                    pl.BlockSpec((1, 1, hd, hd), lambda b, h: (b, h, 0, 0))),
+        # the time recurrence runs inside one grid step (fori over T);
+        # (batch, head) grid steps are independent
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(r, k, v, w, u, s0)
     return y, s_last

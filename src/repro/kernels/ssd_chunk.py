@@ -24,6 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _kernel(x_ref, dt_ref, loga_ref, b_ref, c_ref,
@@ -84,6 +85,10 @@ def ssd_chunk_pallas(xh, dt, loga, Bc, Cc, *, interpret: bool = False):
             pl.BlockSpec((1, 1, 1, hd, ds), lambda g, h: (g, 0, h, 0, 0)),
             pl.BlockSpec((1, 1, 1), lambda g, h: (g, 0, h)),
         ),
+        # intra-chunk recurrence runs inside one grid step; the cross-chunk
+        # stitch happens in the outer associative scan, not in this kernel
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(xr, dtr, lr, br, cr)
     return (y.reshape(B, nc, Q, nh, hd), sb.reshape(B, nc, nh, hd, ds),

@@ -26,7 +26,7 @@ _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
                 "c64": 8, "c128": 16}
 
 COLLECTIVE_OPS = ("all-to-all", "all-reduce", "all-gather", "reduce-scatter",
-                  "collective-permute")
+                  "collective-permute", "ragged-all-to-all")
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _DEF_RE = re.compile(r"^(?:ROOT )?(%[\w.\-]+) = (.+)$")

@@ -110,6 +110,24 @@ def ppermute(x, axes: Axes, perm):
     return lax.ppermute(x, axes, perm=perm)
 
 
+def uniform_cond(pred, true_fn, false_fn, *operands):
+    """``lax.cond`` whose predicate the caller guarantees is mesh-uniform.
+
+    A cond whose branches run *different* collective sequences deadlocks
+    (or silently mismatches) the moment devices disagree on the predicate:
+    some ranks enter the branch's psum, the rest never arrive.  The static
+    analyzer (:mod:`repro.analysis.jaxpr_lint`) therefore flags every cond
+    with asymmetric branch collectives — EXCEPT conds lowered through this
+    wrapper, the one blessed site asserting the uniformity contract: the
+    predicate must be computed from collectively reduced values (e.g. a
+    psum'd verdict) so every rank takes the same branch and the asymmetry
+    is unobservable.  The sentinel's gated optimizer apply
+    (``train/sentinel.py``) is the canonical user: its predicate is the
+    step verdict, psum'd over every sync axis before the branch.
+    """
+    return lax.cond(pred, true_fn, false_fn, *operands)
+
+
 # ------------------------------------------------------------- ragged All2All
 def excl_cumsum(c: jax.Array) -> jax.Array:
     """Exclusive int32 cumsum — the segment-offset idiom every ragged
@@ -135,6 +153,22 @@ def _fit_counts(counts: jax.Array, seg_cap: int) -> jax.Array:
     return jnp.clip(counts, 0, seg_cap)
 
 
+def assert_count_i32(counts: jax.Array, what: str) -> None:
+    """Trace-time dtype gate for count grids at the collective boundary.
+
+    The wire contract is int32 everywhere: silent promotion (x64 mode, a
+    stray python-int arithmetic) doubles count-exchange bytes and breaks
+    the native ragged-A2A paired offset/size contract.  The static
+    analyzer enforces the same rule on traced jaxprs
+    (``collective-int-dtype``); this is its dynamic twin for call paths
+    the entrypoint grid doesn't reach.
+    """
+    if counts.dtype != jnp.int32:
+        raise TypeError(
+            f"{what} must be int32 at the collective boundary, got "
+            f"{counts.dtype} (silent x64/promotion?)")
+
+
 def exchange_counts(send_counts: jax.Array, axes: Axes) -> jax.Array:
     """Tiny int32 All2All: tell every peer how many rows it will receive.
 
@@ -142,6 +176,7 @@ def exchange_counts(send_counts: jax.Array, axes: Axes) -> jax.Array:
     joint rank ``p`` of ``axes``.  Returns (P,) where entry ``p`` is how many
     rows rank ``p`` sends to *this* device.  Identity when the group is 1.
     """
+    assert_count_i32(send_counts, "exchange_counts(send_counts)")
     naxes = _norm(axes)
     P = send_counts.shape[0]
     if not naxes or P == 1:
@@ -230,6 +265,9 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
                 "for the bounded compute slab until the native path learns "
                 "paired clamped sizes (see ROADMAP)", stacklevel=2)
         emulation = "a2a"
+    assert_count_i32(send_counts, "ragged_all_to_all(send_counts)")
+    if recv_counts is not None:
+        assert_count_i32(recv_counts, "ragged_all_to_all(recv_counts)")
     naxes = _norm(axes)
     P = send_counts.shape[0]
     rest = rows.shape[1:]

@@ -121,15 +121,17 @@ def update_sentinel(sent: SentinelState, loss: jax.Array, ok: jax.Array,
 
 
 def gated_update(ok: jax.Array, update_fn, grads, opt_state, params):
-    """``lax.cond``-guarded optimizer apply.
+    """``uniform_cond``-guarded optimizer apply.
 
     ``update_fn(grads, opt_state, params) -> (params, opt_state)`` runs
     only when ``ok``; otherwise both trees pass through bit-unchanged.
     ``ok`` MUST be replicated across the mesh (see :func:`step_verdict`) —
     optimizer updates contain collectives (LAMB trust-ratio norms), and a
-    divergent predicate would deadlock the mesh.
+    divergent predicate would deadlock the mesh.  Routing through
+    :func:`repro.sharding.comm.uniform_cond` both documents that contract
+    and tells the static analyzer the branch asymmetry is intentional.
     """
-    return lax.cond(ok,
-                    lambda g, o, p: update_fn(g, o, p),
-                    lambda g, o, p: (p, o),
-                    grads, opt_state, params)
+    return comm.uniform_cond(ok,
+                             lambda g, o, p: update_fn(g, o, p),
+                             lambda g, o, p: (p, o),
+                             grads, opt_state, params)

@@ -60,6 +60,35 @@ def test_split_computations():
     assert "__entry__" in comps and "%body" in comps and "%cond" in comps
 
 
+RAGGED = textwrap.dedent("""\
+    HloModule ragged
+
+    ENTRY %main (rows: f32[512,32]) -> f32[512,32] {
+      %rows = f32[512,32]{1,0} parameter(0)
+      %out = f32[512,32]{1,0} broadcast(), dimensions={}
+      %so = s32[8]{0} constant({0,0,0,0,0,0,0,0})
+      %ss = s32[8]{0} constant({64,64,64,64,64,64,64,64})
+      ROOT %r = f32[512,32]{1,0} ragged-all-to-all(%rows, %out, %so, %ss, %so, %ss), replica_groups={{0,1,2,3,4,5,6,7}}
+    }
+""")
+
+
+def test_ragged_all_to_all_classified():
+    """The native ragged A2A op must count as a collective, not free ops.
+
+    Before the fix, ``ragged-all-to-all`` was absent from COLLECTIVE_OPS,
+    so native-op runs under-reported collective bytes/wire-seconds.
+    """
+    costs = analyze_hlo(RAGGED, total_devices=8, multi_pod=False)
+    cs = collective_summary(costs)
+    assert cs["n_collectives"] == 1
+    assert cs["bytes_per_op"]["ragged-all-to-all"] == 512 * 32 * 4
+    # group of 8 -> (g-1)/g factor, same class as all-to-all
+    want = (512 * 32 * 4) * (7 / 8) / 50e9
+    assert abs(cs["seconds_per_op"]["ragged-all-to-all"] - want) / want < 1e-9
+    assert cs["total_seconds"] > 0
+
+
 def test_real_module_nonzero():
     """A tiny real jit'd scan must produce loop-multiplied dot flops."""
     import jax
