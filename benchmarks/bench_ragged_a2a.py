@@ -166,6 +166,21 @@ def _child(smoke: bool) -> None:
                "ragged_ms": timed["ragged"],
                "ragged_wire_bytes_measured": ragged_measured}
 
+        # ---- wire-integrity parity overhead (EXPERIMENTS.md §Robust-2) -----
+        # wire_integrity != off appends nl parity rows per (src, dst)
+        # segment on the forward hop and 1 per peer on the reverse hop —
+        # counted off-diagonal like the measured data bytes above.  The
+        # overhead is routing-independent (a constant per-peer tax), so it
+        # shrinks as tokens/device grow; acceptance bound is <= 5% here.
+        nl_parity = V // P_
+        parity_rows = P_ * (P_ - 1) * (nl_parity + 1)   # fwd + reverse
+        data_rows_2hop = 2 * off_diag_rows              # fwd + reverse (echo)
+        row["wire_parity_rows"] = parity_rows
+        row["wire_parity_bytes"] = parity_rows * D_MODEL * bpe
+        row["wire_integrity_overhead_frac"] = (
+            parity_rows * D_MODEL * bpe
+            / (data_rows_2hop * D_MODEL * bpe + 2 * header))
+
         # ---- bounded receive slab (recv_bound_factor) ----------------------
         # the payoff is a STATIC bound: every post-hop stage (re-compaction
         # sort, recompacted FFN) scans `slab_rows` instead of P x R
@@ -241,6 +256,12 @@ def _child(smoke: bool) -> None:
         "recv_bound_factors": list(RB_FACTORS),
         "jax_backend": jax.default_backend(),
         "native_ragged_all_to_all": hasattr(jax.lax, "ragged_all_to_all"),
+        "wire_integrity_note": (
+            "wire_parity_rows / wire_integrity_overhead_frac quantify the "
+            "wire_integrity=detect|quarantine parity-row tax (one extra "
+            "row per (rank, group) segment each direction, no extra "
+            "collective) against the measured two-hop ragged wire bytes; "
+            "see repro.sharding.comm.checksummed_ragged_all_to_all."),
         "caveat": ("CPU container, jax without lax.ragged_all_to_all: the "
                    "ragged exchange runs the fused-slab emulation, whose "
                    "equal-split collective ships the full P x R staging "

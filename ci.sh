@@ -24,12 +24,13 @@
 #                           and config-surface changes)
 #   ./ci.sh --faults        fault-contained-runtime gate only: the step
 #                           sentinel (skip semantics, spike/non-finite
-#                           verdicts), the hardened checkpoint rotation +
-#                           resume bit-determinism, and the 8-device fault
-#                           containment matrix (every faultinject kind x
-#                           {switch, smile} with exact event/drop
-#                           accounting) — the targeted gate for sentinel,
-#                           checkpoint, and hop-hardening changes
+#                           verdicts, the gated ZeRO-1 apply), the hardened
+#                           checkpoint rotation + resume bit-determinism,
+#                           and the 8-device fault containment matrix
+#                           (every faultinject kind x {switch, smile} x
+#                           wire_integrity policy with exact event/drop/
+#                           per-rank accounting) — the targeted gate for
+#                           sentinel, checkpoint, and hop-hardening changes
 #
 # The tier-1 suite is the driver-enforced gate; the smoke step additionally
 # compiles and runs one jitted round trip of every dispatch backend
@@ -58,7 +59,8 @@ fi
 if [[ "${1:-}" == "--faults" ]]; then
     echo "== fault-contained runtime gate =="
     python -m pytest -q tests/test_sentinel.py tests/test_checkpoint.py \
-        tests/test_distributed.py::test_fault_containment
+        tests/test_distributed.py::test_fault_containment \
+        tests/test_distributed.py::test_zero1_equivalence
     echo "CI OK (faults)"
     exit 0
 fi

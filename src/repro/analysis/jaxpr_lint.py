@@ -260,6 +260,13 @@ def _moe_cases():
             if backend == "dropless":
                 name += "/ragged" if ragged else "/padded"
             yield name, cfg
+        # wire-integrity policies ride the ragged hops only: the parity
+        # rows and per-segment verdicts must obey every collective rule
+        # (int32 words, comm.py provenance, no divergent conds)
+        for pol in ("detect", "quarantine"):
+            yield (f"moe/{router}/dropless/ragged/wire-{pol}",
+                   base.with_options(dispatch_backend="dropless",
+                                     ragged_a2a=True, wire_integrity=pol))
 
 
 def _trace_moe(cfg, mesh, plan):

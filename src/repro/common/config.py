@@ -76,14 +76,28 @@ MOE_OPTIONS: Tuple[MoEOption, ...] = (
               dryrun_opts=(("tightcap", True),)),
     MoEOption("fault_plan", "str",
               help="deterministic fault injection 'kind[@seed][:hop]' with "
-                   "kind in counts|nanrows|dropseg|skew (see "
-                   "repro.common.faultinject); count faults are inert on "
-                   "padded/local hops; 'off'/None = no injection (the "
-                   "bit-identical production path)",
+                   "kind in counts|nanrows|dropseg|skew|bitflip|inflate|"
+                   "dupseg (see repro.common.faultinject); count/wire "
+                   "faults are inert on padded/local hops; 'off'/None = no "
+                   "injection (the bit-identical production path)",
               dryrun_opts=(("fault_counts", "counts"),
                            ("fault_nanrows", "nanrows"),
                            ("fault_dropseg", "dropseg"),
-                           ("fault_skew", "skew"))),
+                           ("fault_skew", "skew"),
+                           ("fault_bitflip", "bitflip"),
+                           ("fault_inflate", "inflate"),
+                           ("fault_dupseg", "dupseg"))),
+    MoEOption("wire_integrity", "choice", ("off", "detect", "quarantine"),
+              help="per-segment payload checksums on every ragged exchange "
+                   "(parity rows riding the slab, both directions): off = "
+                   "production wire (bit-identical), detect = verify + "
+                   "account wire_faults but pass payloads through (A/B), "
+                   "quarantine = additionally zero-fill and drop flagged "
+                   "segments with exact per-(hop, src rank) accounting",
+              dryrun_opts=(("wire_detect", "detect"),
+                           ("wire_quarantine", "quarantine")),
+              requires=(("dispatch_backend", "dropless"),
+                        ("ragged_a2a", True))),
 )
 
 MOE_OPTION_FIELDS = {o.field: o for o in MOE_OPTIONS}
@@ -195,6 +209,16 @@ class MoEConfig:
     # matrix).  Count-grid sanitization + fault_events accounting stay
     # active either way; only the *injection* is gated on this.
     fault_plan: Optional[str] = None
+    # wire-integrity policy for every ragged exchange (repro.core.pipeline /
+    # repro.sharding.comm checksummed_ragged_all_to_all): "off" traces the
+    # exact production wire; "detect" appends per-segment parity rows,
+    # verifies on arrival (both directions) and accounts
+    # MoEStats.fault_events / wire_faults but passes payloads through;
+    # "quarantine" additionally zero-fills flagged segments and drops their
+    # assignments with exact per-(hop, src rank) accounting.  Requires the
+    # dropless backend with ragged hops (nothing else puts segments on a
+    # wire); single-rank hops are untouched (no wire to guard).
+    wire_integrity: str = "off"
 
     def with_options(self, **kw) -> "MoEConfig":
         """Rebuild with runtime dispatch options swapped, validated against
@@ -236,9 +260,11 @@ class MoEConfig:
         cfg = dataclasses.replace(self, **kw)
         # registry-declared prerequisites, checked on the RESULT so partial
         # updates can't configure a knob onto a path that ignores it (an
-        # option counts as active when its value is not None)
+        # option counts as active unless its value is the knob's inert
+        # default: None, False, or the "off" choice)
         for opt in MOE_OPTIONS:
-            if not opt.requires or getattr(cfg, opt.field) is None:
+            if not opt.requires or getattr(cfg, opt.field) in (None, False,
+                                                               "off"):
                 continue
             for req_field, req_val in opt.requires:
                 if getattr(cfg, req_field) != req_val:

@@ -30,9 +30,12 @@ tests can compute the expected event counts with the ``expected_*`` /
   whole segment dropped with exact ``drop_frac`` accounting via the echoed
   reverse hop).  Inert on padded/local hops (no count grid on the wire).
 * ``nanrows`` — overwrite seeded rows of the post-exchange receive slab
-  (or the local/padded dispatch buffer) with NaN.  No hop-level detection
-  by design — payloads are not checksummed (ROADMAP) — containment is the
-  step sentinel's non-finite verdict skipping the optimizer update.
+  (or the local/padded dispatch buffer) with NaN.  With
+  ``wire_integrity="off"`` there is no hop-level detection — containment
+  is the step sentinel's non-finite verdict skipping the optimizer
+  update.  With the wire-integrity layer on, the injection moves onto the
+  received *wire* slab (one seeded source rank's region) and the
+  per-segment parity row localizes it to the exact (hop, src rank).
 * ``dropseg`` — zero one seeded source rank's row of the count grid at
   every receiver: the peer "sent nothing" (silent segment loss).  A valid
   grid, so zero ``fault_events``; containment is exact drop accounting —
@@ -42,6 +45,22 @@ tests can compute the expected event counts with the ``expected_*`` /
   targets one seeded group (router-collapse storm).  Unbounded ragged hops
   absorb it with zero drops; bounded hops clamp and account; the router
   watchdog (``hop_max_load`` / ``hop_load_entropy`` in ``MoEStats``) alarms.
+* ``bitflip`` — XOR one bit per lane of one seeded source rank's region of
+  the received wire slab (bit 0 on data rows, bit 8 on parity rows, so the
+  two deltas can never cancel for segments shorter than 256 rows).
+  Structurally invisible (a valid grid, finite floats, plausible
+  magnitudes): the count-grid sanitizer *provably cannot* see it.  Only
+  the checksum layer detects it; with ``wire_integrity="off"`` the flipped
+  payload flows to the loss undetected.
+* ``inflate`` — add 1 to one seeded in-bounds entry of the count grid
+  before sanitation.  Still a valid grid (zero sanitizer events), but the
+  believed segment length now disagrees with the parity word's length
+  term, so checksum verification localizes the inflating source exactly.
+* ``dupseg``  — replay one seeded source rank's segment as its
+  neighbour's: grid row ``w`` is overwritten with row ``v=(w+1)%P`` and
+  ``v``'s wire region is copied onto ``w``'s.  Data, length and fold all
+  verify — only the parity word's (src, dest, group) *tag* gives the
+  replay away, which is exactly what the tag term exists for.
 
 ``@seed`` defaults to 0; ``:hop`` defaults to ``-1`` (all hops).
 ``"none"``/``""`` parse to ``None`` (no injection — the bit-identical
@@ -57,7 +76,8 @@ import random
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-FAULT_KINDS = ("counts", "nanrows", "dropseg", "skew")
+FAULT_KINDS = ("counts", "nanrows", "dropseg", "skew", "bitflip", "inflate",
+               "dupseg")
 
 # injected magnitudes (static; chosen so tests can assert exact accounting)
 COUNT_POISON = -7          # negative count written by the "counts" kind
@@ -79,7 +99,7 @@ class FaultPlan:
     def wants_echo(self) -> bool:
         """Count-targeting kinds need the echoed reverse hop for exact
         drop accounting (see ``pipeline._ragged_reverse``)."""
-        return self.kind in ("counts", "dropseg")
+        return self.kind in ("counts", "dropseg", "inflate", "dupseg")
 
 
 def parse_fault_plan(spec: Optional[str]) -> Optional[FaultPlan]:
@@ -158,6 +178,27 @@ def skew_target(fp: FaultPlan, level: int, num_groups: int) -> int:
     return _rng(fp, level, num_groups).randrange(num_groups)
 
 
+def wire_victim(fp: FaultPlan, level: int, P: int) -> int:
+    """The source rank whose received wire region the wire-slab kinds
+    (``bitflip``, wire-mode ``nanrows``, ``dupseg``) corrupt."""
+    return _rng(fp, level, P).randrange(P)
+
+
+def inflate_site(fp: FaultPlan, level: int, P: int, nl: int
+                 ) -> Tuple[int, int]:
+    """The (src, group) count-grid entry the ``inflate`` kind bumps by 1."""
+    i = _rng(fp, level, P, nl).randrange(P * nl)
+    return (i // nl, i % nl)
+
+
+def wire_fault_victim(fp: FaultPlan, level: int, P: int, nl: int) -> int:
+    """The source rank the checksum layer must localize for ``fp.kind``
+    on this hop — shared with the fault-matrix tests' expectations."""
+    if fp.kind == "inflate":
+        return inflate_site(fp, level, P, nl)[0]
+    return wire_victim(fp, level, P)
+
+
 # =============================================================================
 # Injectors (called by the pipeline executor at trace time; lazy jnp)
 # =============================================================================
@@ -194,6 +235,82 @@ def nan_rows(fp: FaultPlan, level: int, rows, valid=None):
     hit = (jnp.cumsum(v) <= N_NAN_ROWS) & (v > 0)
     hit = hit.reshape(hit.shape + (1,) * (rows.ndim - 1))
     return jnp.where(hit, jnp.nan, rows)
+
+
+def inflate_grid(fp: FaultPlan, level: int, len_grid):
+    """``inflate``: bump one seeded entry of the believed (P, nl) grid.
+
+    Unlike ``counts`` the result is still a *valid* grid (non-negative,
+    in-bounds at the fault-matrix settings), so the sanitizer reports zero
+    events — only the parity word's length term can catch it."""
+    p, g = inflate_site(fp, level, *len_grid.shape)
+    return len_grid.at[p, g].add(1)
+
+
+def dup_grid(fp: FaultPlan, level: int, len_grid):
+    """``dupseg``: overwrite victim row ``w`` with row ``v=(w+1)%P``."""
+    P = len_grid.shape[0]
+    w = wire_victim(fp, level, P)
+    return len_grid.at[w].set(len_grid[(w + 1) % P])
+
+
+def _wire_int_view(wire):
+    """Bitcast a float wire slab to its same-width integer view."""
+    import jax.numpy as jnp
+    from jax import lax
+    it = jnp.dtype(f"int{wire.dtype.itemsize * 8}")
+    return lax.bitcast_convert_type(wire, it)
+
+
+def flip_wire(fp: FaultPlan, level: int, wire, starts, data_counts, nl: int):
+    """``bitflip``: XOR lanes of the victim's received wire region.
+
+    Data rows get bit 0, parity rows bit 8 — asymmetric on purpose: a
+    uniform flip of the lowest bit everywhere shifts an L=1 segment's fold
+    and its stored parity word by the *same* ±1 and escapes detection.
+    With ±1 on data and ±256 on parity the per-lane deltas cannot cancel
+    while the segment is shorter than 256 rows."""
+    import jax.numpy as jnp
+    from jax import lax
+    v = wire_victim(fp, level, starts.shape[0])
+    iw = _wire_int_view(wire)
+    r = jnp.arange(wire.shape[0], dtype=jnp.int32)
+    s, c = starts[v], data_counts[v]
+    in_data = (r >= s) & (r < s + c)
+    in_par = (r >= s + c) & (r < s + c + nl)
+    mask = jnp.where(in_data, 1, jnp.where(in_par, 256, 0)).astype(iw.dtype)
+    return lax.bitcast_convert_type(iw ^ mask[:, None], wire.dtype)
+
+
+def nan_wire(fp: FaultPlan, level: int, wire, starts, wire_counts):
+    """Wire-mode ``nanrows``: NaN the first rows of the victim's region.
+
+    Row 0 of a region is always either a live data row or the first
+    parity row, so at least one NaN'd row is load-bearing and the
+    checksum mismatch is guaranteed."""
+    import jax.numpy as jnp
+    v = wire_victim(fp, level, starts.shape[0])
+    r = jnp.arange(wire.shape[0], dtype=jnp.int32)
+    n = jnp.minimum(jnp.int32(N_NAN_ROWS), wire_counts[v])
+    hit = (r >= starts[v]) & (r < starts[v] + n)
+    return jnp.where(hit[:, None], jnp.nan, wire)
+
+
+def copy_wire_region(fp: FaultPlan, level: int, wire, starts, wire_counts):
+    """``dupseg``: replay ``v=(w+1)%P``'s wire region into victim ``w``'s.
+
+    Paired with :func:`dup_grid` (so the two regions have equal believed
+    extents); the copied parity row verifies against its own data but
+    carries ``v``'s source tag where the receiver expects ``w``'s."""
+    import jax.numpy as jnp
+    P = starts.shape[0]
+    w = wire_victim(fp, level, P)
+    v = (w + 1) % P
+    r = jnp.arange(wire.shape[0], dtype=jnp.int32)
+    off = r - starts[w]
+    in_w = (off >= 0) & (off < wire_counts[w])
+    src = jnp.where(in_w, starts[v] + off, r)
+    return jnp.take(wire, src, axis=0)
 
 
 def apply_skew(fp: FaultPlan, level: int, dec, num_groups: int,

@@ -247,7 +247,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         capacity=capacity(t, k, cfg.capacity_factor, V),
         perm=_rank_major_perm(V, vpn, b_n, b_mh, m_mesh),
         recv_bound_factor=cfg.recv_bound_factor,
-        lb_coef=cfg.lb_alpha, loss_groups=E)
+        lb_coef=cfg.lb_alpha, loss_groups=E,
+        wire_integrity=cfg.wire_integrity)
 
     wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
                                         b_n, b_m)
@@ -300,7 +301,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         exchange=_exchange_kind(cfg, n_mesh, innermost=False),
         capacity=cap1, perm=None,           # node ids are already rank-major
         recv_bound_factor=cfg.recv_bound_factor,
-        lb_coef=cfg.lb_alpha, loss_groups=n_g)
+        lb_coef=cfg.lb_alpha, loss_groups=n_g,
+        wire_integrity=cfg.wire_integrity)
 
     # ---------------- hop 2: route within node -------------------------------
     def route_intra(x1, valid1, node_row):
@@ -336,7 +338,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
         exchange=_exchange_kind(cfg, m_mesh, innermost=True),
         capacity=cap2, perm=_rank_major_perm(V2, vpn, b_n, b_mh, m_mesh),
         recv_bound_factor=cfg.recv_bound_factor,
-        lb_coef=cfg.lb_beta, loss_groups=e_pn)
+        lb_coef=cfg.lb_beta, loss_groups=e_pn,
+        wire_integrity=cfg.wire_integrity)
 
     wsel, n_groups = _my_expert_weights(params["experts"], layout, plan,
                                         b_n, b_m)

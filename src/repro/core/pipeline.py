@@ -55,6 +55,19 @@ and the executor reports the clamp drops in the hop's ``drop_frac``.
 ``factor=None`` (the default) keeps the bit-identical zero-drop worst-case
 bound.  The payoff is a ~``P/factor``-fold smaller post-hop FFN bound —
 what a production deployment runs with the LB loss keeping skew near 1.
+
+**Wire integrity** (robustness follow-up, implemented here once for all
+hops).  ``HopSpec.wire_integrity`` arms per-segment payload checksums on
+every ragged exchange, both directions: the parity-row wire format lives
+in :mod:`repro.sharding.comm` (one integrity word per (src, dst, group)
+segment, riding the slab as an extra row — fold + length + identity tag);
+verification, quarantine and the exact per-(hop, src rank) accounting
+(``MoEStats.fault_events`` / ``wire_faults``) live in
+:func:`_ragged_forward` / :func:`_ragged_reverse` below.  ``"detect"``
+flags and passes payloads through (the A/B observability mode);
+``"quarantine"`` zero-fills flagged segments and charges their assignments
+to the hop's drop accounting via the echoed reverse — a corrupting peer
+costs its own tokens, not the whole step.
 """
 from __future__ import annotations
 
@@ -93,12 +106,19 @@ class MoEStats:
     (the executor owns it; the old per-schedule ad-hoc folding is gone).
 
     Robustness fields (fault-containment PR): ``fault_events`` counts, per
-    hop, the count-grid entries the sanitizer rejected (psum'd over the
-    sync axes — global totals, summed across layers); ``hop_max_load`` /
+    hop, the count-grid entries the sanitizer rejected plus the wire
+    segments the checksum layer flagged (psum'd over the sync axes —
+    global totals, summed across layers); ``hop_max_load`` /
     ``hop_load_entropy`` feed the router-collapse watchdog — the global
     max-load fraction (f-vector max) and normalized load entropy (in
     [0, 1], 1 = uniform) per hop, accumulated worst-case across layers
     (max / min respectively; unused hop slots stay at the neutral 0 / 1).
+
+    ``wire_faults`` (wire-integrity PR) localizes checksum verdicts: entry
+    ``[hop, s]`` is the global number of (receiver, direction) checks that
+    flagged source rank ``s`` (ranks folded mod :data:`WIRE_SRC_BINS`) on
+    that hop — the "which rank is corrupting the wire" dashboard row.
+    All-zero whenever ``wire_integrity="off"`` or the wire is healthy.
     """
     lb_loss: jax.Array
     z_loss: jax.Array
@@ -107,16 +127,25 @@ class MoEStats:
     # quarantined/suppressed segments under count faults)
     drop_frac: jax.Array
     hop_drop_frac: jax.Array        # (MAX_HOPS,) per-hop breakdown
-    fault_events: jax.Array         # (MAX_HOPS,) sanitizer rejections
+    fault_events: jax.Array         # (MAX_HOPS,) sanitizer + wire rejections
     hop_max_load: jax.Array         # (MAX_HOPS,) max f-vector entry
     hop_load_entropy: jax.Array     # (MAX_HOPS,) normalized load entropy
+    wire_faults: jax.Array          # (MAX_HOPS, WIRE_SRC_BINS) per-src-rank
+
+
+# source-rank bins of MoEStats.wire_faults (ranks folded mod this; fixed so
+# stats trees from different mesh shapes always add)
+WIRE_SRC_BINS = 16
+
+WIRE_POLICIES = ("off", "detect", "quarantine")
 
 
 def zero_stats() -> MoEStats:
     z = jnp.float32(0.0)
     zv = jnp.zeros((MAX_HOPS,), jnp.float32)
     return MoEStats(z, z, z, zv, zv,
-                    zv, jnp.ones((MAX_HOPS,), jnp.float32))
+                    zv, jnp.ones((MAX_HOPS,), jnp.float32),
+                    jnp.zeros((MAX_HOPS, WIRE_SRC_BINS), jnp.float32))
 
 
 # =============================================================================
@@ -297,6 +326,13 @@ class HopSpec:
     ``perm`` (``(num_groups,)`` int32 or None) relabels canonical group ids
     rank-major so rank ``p`` owns ids ``[p*gpr, (p+1)*gpr)``; None means the
     canonical order already is rank-major (identity).
+
+    ``wire_integrity`` arms the parity-row checksum layer on this hop's
+    ragged exchanges, both directions (see the module docstring): ``"off"``
+    traces the exact production wire, ``"detect"`` verifies and accounts
+    but passes payloads through, ``"quarantine"`` additionally drops every
+    flagged segment.  Ignored on local/padded exchanges and size-1 meshes
+    (nothing crosses a wire).
     """
     name: str                         # "flat" | "inter" | "intra" (display)
     axes: Tuple[str, ...]             # mesh axes the exchange spans
@@ -308,11 +344,16 @@ class HopSpec:
     recv_bound_factor: Optional[float] = None   # ragged exchange only
     lb_coef: float = 0.0              # LB loss coefficient for this hop
     loss_groups: int = 0              # router prob domain (LB/z losses)
+    wire_integrity: str = "off"       # "off" | "detect" | "quarantine"
 
     def __post_init__(self):
         if self.exchange not in EXCHANGES:
             raise ValueError(f"unknown exchange {self.exchange!r}; "
                              f"expected one of {EXCHANGES}")
+        if self.wire_integrity not in WIRE_POLICIES:
+            raise ValueError(f"unknown wire_integrity "
+                             f"{self.wire_integrity!r}; expected one of "
+                             f"{WIRE_POLICIES}")
         if self.num_groups % max(self.n_ranks, 1):
             raise ValueError(f"num_groups {self.num_groups} must fold onto "
                              f"{self.n_ranks} ranks")
@@ -428,11 +469,15 @@ def sanitize_len_grid(len_grid: jax.Array, block: int, src_rows: int
     with ``events == 0`` — pure integer math, bit-identical outputs
     (pinned by the golden matrix).
 
-    Known limitation (ROADMAP): an *in-bounds inflated* count — a source
-    claiming more rows than it actually staged, within its bound — is
-    indistinguishable from a real count without payload checksums; the
-    sanitizer guarantees no OOB/crash/hang, and the step sentinel catches
-    the downstream loss anomaly.
+    Known limitation, by construction: an *in-bounds inflated* count — a
+    source claiming more rows than it actually staged, within its bound —
+    is indistinguishable from a real count at grid level; the sanitizer
+    only guarantees no OOB/crash/hang.  That gap is what the wire-integrity
+    layer closes: with ``HopSpec.wire_integrity`` on, the per-segment
+    parity word's length term exposes the inflation (and its fold/tag terms
+    expose payload corruption and segment replay) with exact per-(hop, src
+    rank) localization; with it off, the step sentinel still catches the
+    downstream loss anomaly globally.
     """
     aligned = ((len_grid + block - 1) // block) * block
     neg = len_grid < 0
@@ -455,10 +500,24 @@ class _RaggedHopState:
     rows_out: int             # R: sender layout rows (reverse recv bound)
 
 
+def _wire_tags(me: jax.Array, P: int, nl: int, incoming: bool) -> jax.Array:
+    """(P*nl,) int32 identity tags of a wire's segments, flat-ordered.
+
+    ``tag = (src * P + dst) * nl + g`` — outgoing tags fix ``src = me``,
+    incoming tags fix ``dst = me``; a replayed segment carries the wrong
+    ``src`` and the tag term of its parity word gives it away.
+    """
+    other = jnp.repeat(jnp.arange(P, dtype=jnp.int32), nl)
+    g = jnp.tile(jnp.arange(nl, dtype=jnp.int32), P)
+    src, dst = (other, me) if incoming else (me, other)
+    return (src * P + dst) * nl + g
+
+
 def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
                     seg_lens: jax.Array, spec: HopSpec, block: int,
                     fp: Optional[FI.FaultPlan] = None, level: int = 0
-                    ) -> Tuple[_RaggedHopState, jax.Array]:
+                    ) -> Tuple[_RaggedHopState, jax.Array,
+                               Optional[jax.Array]]:
     """Forward ragged All2All of one dispatch hop — zero capacity padding.
 
     ``rows``: (R, d) *rank-major* ragged layout; ``group_starts``: its
@@ -481,14 +540,26 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
 
     The exchanged count grid is never trusted: :func:`sanitize_len_grid`
     quarantines sources with invalid counts before any layout math (the
-    identity, and bit-identical, on healthy grids).  Returns the hop state
-    plus the sanitizer's local event count.  ``fp`` optionally injects
-    faults (count poison / segment suppression / NaN slab rows) for this
-    ``level`` — and because a count-targeting plan can legitimately shrink
-    ``rc`` below what the senders shipped, it also forces the clamp-style
-    ``kept`` bookkeeping so the reverse hop echoes the surviving counts
-    instead of assuming everything returns (``fp=None`` keeps the
-    collective-identical zero-echo fast path).
+    identity, and bit-identical, on healthy grids).  ``fp`` optionally
+    injects faults for this ``level`` — grid corruption (``counts`` /
+    ``dropseg`` / ``inflate`` / ``dupseg``) before sanitation, wire-slab
+    corruption (``bitflip`` / wire-mode ``nanrows`` / ``dupseg``'s region
+    replay) onto the received checksummed slab — and because a
+    count-targeting plan can legitimately shrink ``rc`` below what the
+    senders shipped, it also forces the clamp-style ``kept`` bookkeeping so
+    the reverse hop echoes the surviving counts instead of assuming
+    everything returns (``fp=None`` keeps the collective-identical
+    zero-echo fast path).
+
+    With ``spec.wire_integrity`` armed (and a real wire, ``P > 1``) the
+    exchange rides :func:`repro.sharding.comm.checksummed_ragged_all_to_all`
+    instead: each source's segment carries ``nl`` parity rows, the receiver
+    recomputes every (src, group) integrity word from the payload and
+    counts it believes, and a mismatching *source* is flagged —
+    ``"quarantine"`` zero-fills its rows, drops their validity (combine
+    skips them) and echoes ``kept = 0`` so the origin accounts every lost
+    assignment; ``"detect"`` only flags.  Returns ``(state, sanitizer
+    events, per-source wire verdicts | None)``.
     """
     P, nl = spec.n_ranks, spec.groups_per_rank
     R = rows.shape[0]
@@ -506,6 +577,10 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
         len_grid = FI.corrupt_len_grid(fp, level, len_grid)
     if inject and fp.kind == "dropseg":
         len_grid = FI.drop_segment(fp, level, len_grid)
+    if inject and fp.kind == "inflate":
+        len_grid = FI.inflate_grid(fp, level, len_grid)
+    if inject and fp.kind == "dupseg":
+        len_grid = FI.dup_grid(fp, level, len_grid)
     len_grid, events = sanitize_len_grid(len_grid, block, R)
     rc = (((len_grid + block - 1) // block) * block).sum(
         axis=1).astype(jnp.int32)
@@ -513,76 +588,208 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
     factor = spec.recv_bound_factor
     clamped = (factor is not None and P > 1
                and recv_bound_rows(factor, R, P, nl, block) < P * R)
-    if not clamped:
-        # no factor, single-rank hop, or a bound that doesn't reduce the
-        # worst case: keep the exact zero-drop path (native-op eligible, no
-        # echo exchange) so a non-reducing factor stays bit-identical AND
-        # collective-identical to factor=None
-        B = P * R
+    B = recv_bound_rows(factor, R, P, nl, block) if clamped else P * R
+    wire = spec.wire_integrity != "off" and P > 1
+    if not wire:
+        if not clamped:
+            # no factor, single-rank hop, or a bound that doesn't reduce the
+            # worst case: keep the exact zero-drop path (native-op eligible,
+            # no echo exchange) so a non-reducing factor stays bit-identical
+            # AND collective-identical to factor=None
+            recv, _ = comm.ragged_all_to_all(rows, send_counts, spec.axes,
+                                             recv_rows=B, recv_counts=rc)
+            gid, valid = D.ragged_recv_layout(len_grid, block, B)
+            if inject and fp.kind == "nanrows":
+                recv = FI.nan_rows(fp, level, recv, valid)
+            # under a count-targeting plan, rc can shrink below what peers
+            # shipped: echo the surviving counts (== rc, sum(rc) <= P*R) so
+            # senders learn exactly which rows died instead of reading stale
+            # slab rows back — the quarantine's drop accounting
+            kept = rc if force_echo else None
+            return _RaggedHopState(recv, gid, valid, rc, send_counts,
+                                   kept, R), events, None
+        # bounded slab: segments past B rows are truncated on arrival (the
+        # emulations do this natively; allow_truncate keeps the jax-native
+        # op off this path, whose paired offset/size contract cannot
+        # truncate)
         recv, _ = comm.ragged_all_to_all(rows, send_counts, spec.axes,
-                                         recv_rows=B, recv_counts=rc)
+                                         recv_rows=B, recv_counts=rc,
+                                         allow_truncate=True)
         gid, valid = D.ragged_recv_layout(len_grid, block, B)
         if inject and fp.kind == "nanrows":
             recv = FI.nan_rows(fp, level, recv, valid)
-        # under a count-targeting plan, rc can shrink below what peers
-        # shipped: echo the surviving counts (== rc, sum(rc) <= P*R) so
-        # senders learn exactly which rows died instead of reading stale
-        # slab rows back — the quarantine's drop accounting
-        kept = rc if force_echo else None
+        kept = jnp.clip(B - comm.excl_cumsum(rc), 0, rc)
         return _RaggedHopState(recv, gid, valid, rc, send_counts,
-                               kept, R), events
-    B = recv_bound_rows(factor, R, P, nl, block)
-    # bounded slab: segments past B rows are truncated on arrival (the
-    # emulations do this natively; allow_truncate keeps the jax-native op
-    # off this path, whose paired offset/size contract cannot truncate)
-    recv, _ = comm.ragged_all_to_all(rows, send_counts, spec.axes,
-                                     recv_rows=B, recv_counts=rc,
-                                     allow_truncate=True)
-    gid, valid = D.ragged_recv_layout(len_grid, block, B)
+                               kept, R), events, None
+
+    # ---- checksummed wire: parity rows ride the slab ------------------------
+    me = comm.axis_index(spec.axes)
+    words = comm.segment_parity_words(
+        rows, group_starts, seg_lens, _wire_tags(me, P, nl, incoming=False))
+    parity = comm.words_to_rows(words, rows.dtype)
+    rcw = rc + jnp.int32(nl)
+    slab, _ = comm.checksummed_ragged_all_to_all(
+        rows, parity, send_counts, spec.axes, recv_rows=B + P * nl,
+        recv_counts=rc, nl=nl, allow_truncate=clamped)
+    woff = comm.excl_cumsum(rcw)
+    if inject and fp.kind == "bitflip":
+        slab = FI.flip_wire(fp, level, slab, woff, rc, nl)
     if inject and fp.kind == "nanrows":
-        recv = FI.nan_rows(fp, level, recv, valid)
-    kept = jnp.clip(B - comm.excl_cumsum(rc), 0, rc)
-    return _RaggedHopState(recv, gid, valid, rc, send_counts,
-                           kept, R), events
+        slab = FI.nan_wire(fp, level, slab, woff, rcw)
+    if inject and fp.kind == "dupseg":
+        slab = FI.copy_wire_region(fp, level, slab, woff, rcw)
+    recv, par = comm.split_checksummed_recv(slab, rc, nl, B)
+    gid, valid = D.ragged_recv_layout(len_grid, block, B)
+    doff = comm.excl_cumsum(rc)
+    sseg, swithin, sval = D.ragged_row_membership(
+        jnp.concatenate([doff, doff[-1:] + rc[-1:]]), rc, B)
+    if clamped:
+        kept_wire = jnp.clip((B + P * nl) - woff, 0, rcw)
+        full = kept_wire == rcw          # region fully arrived (incl parity)
+        data_kept = jnp.minimum(kept_wire, rc)
+        # a truncated source's missing rows read clamped garbage off the
+        # slab edge: zero them and drop their validity — the plain receive
+        # gets this for free (its truncated rows simply never materialize)
+        alive = sval & (swithin < jnp.take(data_kept, sseg))
+        recv = jnp.where(alive[:, None], recv, 0)
+        valid = valid & alive
+    else:
+        full = jnp.ones((P,), bool)
+        data_kept = rc
+    aligned = (((len_grid + block - 1) // block) * block).reshape(-1)
+    rbounds = jnp.concatenate(
+        [comm.excl_cumsum(aligned),
+         aligned.sum().reshape(1).astype(jnp.int32)])
+    expect = comm.segment_parity_words(
+        recv, rbounds, len_grid.reshape(-1),
+        _wire_tags(me, P, nl, incoming=True))
+    bad_cell = jnp.any(
+        comm.int_lane_view(par.reshape(P * nl, -1))
+        != comm.stored_words(expect, recv.dtype), axis=-1).reshape(P, nl)
+    # source-granular verdict: one corrupt (src, group) cell condemns the
+    # whole source segment — a partially believed region would shift every
+    # later group's sub-offsets exactly like a half-believed count row
+    src_bad = bad_cell.any(axis=1) & full
+    if spec.wire_integrity == "quarantine":
+        rowbad = jnp.take(src_bad, sseg) & sval
+        recv = jnp.where(rowbad[:, None], 0, recv)
+        valid = valid & ~rowbad
+        kept = jnp.where(src_bad, 0, data_kept)
+    else:
+        kept = data_kept if (clamped or force_echo) else None
+    return (_RaggedHopState(recv, gid, valid, rc, send_counts, kept, R),
+            events, src_bad.astype(jnp.float32))
 
 
 def _ragged_reverse(y_slab: jax.Array, hs: _RaggedHopState, spec: HopSpec
-                    ) -> Tuple[jax.Array, Optional[jax.Array]]:
+                    ) -> Tuple[jax.Array, Optional[jax.Array],
+                               Optional[jax.Array]]:
     """Reverse ragged All2All: route each source's slab segment back to its
     origin rank at the origin offsets.
 
-    Returns ``(back, survived)``: ``back`` (R, d) aligned with the sender's
-    original layout rows; ``survived`` (R,) marks the rows whose results
-    actually returned — None on the unclamped path (everything returns, no
-    extra collective: the mirrored counts are already known).  On the
-    clamped path the reverse runs its own tiny count exchange, which is
-    exactly the "clamped counts echoed on the reverse path": every sender
-    learns how many of its rows each receiver kept, reconstructs which
-    layout rows those were (each receiver keeps a contiguous *prefix* of
-    each sender's segment), and zero-fills the clamp-dropped rows.
+    Returns ``(back, survived, wire_bad)``: ``back`` (R, d) aligned with
+    the sender's original layout rows; ``survived`` (R,) marks the rows
+    whose results actually returned — None on the unclamped path
+    (everything returns, no extra collective: the mirrored counts are
+    already known).  On the clamped path the reverse runs its own tiny
+    count exchange, which is exactly the "clamped counts echoed on the
+    reverse path": every sender learns how many of its rows each receiver
+    kept, reconstructs which layout rows those were (each receiver keeps a
+    contiguous *prefix* of each sender's segment), and zero-fills the
+    clamp-dropped rows.
+
+    With ``spec.wire_integrity`` armed the returning slab is checksummed
+    too (``nl = 1``: one parity row per peer — the reverse wire's segments
+    are per-source, not per-group): the origin verifies each returning
+    segment's word and, under ``"quarantine"``, zero-fills and un-survives
+    rows from flagged peers.  ``wire_bad`` is the (P,) per-peer verdict
+    (None with the layer off).  Because quarantine can zero ``kept``
+    *mid-slab*, the wire path first compacts the surviving segments to the
+    echoed offsets — the off-path's prefix-survival shortcut (send from
+    unclamped offsets) no longer holds.
     """
     R = hs.rows_out
+    P = spec.n_ranks
+    wire = spec.wire_integrity != "off" and P > 1
+    if not wire:
+        if hs.kept is None:
+            back, _ = comm.ragged_all_to_all(y_slab, hs.recv_counts,
+                                             spec.axes, recv_rows=R,
+                                             seg_rows=R,
+                                             recv_counts=hs.send_counts)
+            return back, None, None
+        # clamped: each surviving forward segment is a prefix of the slab,
+        # so sending `kept` rows from the unclamped offsets is
+        # self-consistent.  The reverse can never truncate (sum(rb) <=
+        # sum(send_counts) <= R), so it stays native-op eligible — only the
+        # forward needs allow_truncate
+        back_c, rb = comm.ragged_all_to_all(y_slab, hs.kept, spec.axes,
+                                            recv_rows=R, seg_rows=R)
+        # rb[p] = rows peer p kept of MY segment (the echo). Returning
+        # segments arrive compacted at cumsum(rb); remap each to its
+        # original offset.
+        send_starts = jnp.concatenate(
+            [comm.excl_cumsum(hs.send_counts),
+             hs.send_counts.sum().reshape(1).astype(jnp.int32)])
+        seg, within, ok = D.ragged_row_membership(send_starts, rb, R)
+        rboff = comm.excl_cumsum(rb)
+        src = jnp.where(ok, jnp.take(rboff, seg) + within, 0)
+        back = jnp.where(ok[:, None], jnp.take(back_c, src, axis=0), 0)
+        return back, ok, None
+
+    # ---- checksummed reverse wire -------------------------------------------
+    me = comm.axis_index(spec.axes)
     if hs.kept is None:
-        back, _ = comm.ragged_all_to_all(y_slab, hs.recv_counts, spec.axes,
-                                         recv_rows=R, seg_rows=R,
-                                         recv_counts=hs.send_counts)
-        return back, None
-    # clamped: each surviving forward segment is a prefix of the slab, so
-    # sending `kept` rows from the unclamped offsets is self-consistent.
-    # The reverse can never truncate (sum(rb) <= sum(send_counts) <= R), so
-    # it stays native-op eligible — only the forward needs allow_truncate
-    back_c, rb = comm.ragged_all_to_all(y_slab, hs.kept, spec.axes,
-                                        recv_rows=R, seg_rows=R)
-    # rb[p] = rows peer p kept of MY segment (the echo). Returning segments
-    # arrive compacted at cumsum(rb); remap each to its original offset.
-    send_starts = jnp.concatenate(
-        [comm.excl_cumsum(hs.send_counts),
-         hs.send_counts.sum().reshape(1).astype(jnp.int32)])
-    seg, within, ok = D.ragged_row_membership(send_starts, rb, R)
+        # mirror-counts path: segments already sit at the believed offsets
+        sc, y_send, rb = hs.recv_counts, y_slab, hs.send_counts
+    else:
+        # compact surviving segments to the echoed cumsum offsets (a
+        # quarantined source leaves a hole mid-slab, so the data no longer
+        # sits where excl_cumsum(kept) says)
+        sc = hs.kept
+        doff = comm.excl_cumsum(hs.recv_counts)
+        koff = comm.excl_cumsum(sc)
+        kb = jnp.concatenate([koff, koff[-1:] + sc[-1:]])
+        seg, within, ok = D.ragged_row_membership(kb, sc, y_slab.shape[0])
+        idx = jnp.where(ok, jnp.take(doff, seg) + within, 0)
+        y_send = jnp.where(ok[:, None], jnp.take(y_slab, idx, axis=0), 0)
+        rb = comm.exchange_counts(sc, spec.axes)
+    soff = comm.excl_cumsum(sc)
+    words = comm.segment_parity_words(
+        y_send, jnp.concatenate([soff, soff[-1:] + sc[-1:]]), sc,
+        _wire_tags(me, P, 1, incoming=False))
+    wire_back, _ = comm.checksummed_ragged_all_to_all(
+        y_send, comm.words_to_rows(words, y_send.dtype), sc, spec.axes,
+        recv_rows=R + P, recv_counts=rb, nl=1)
+    back_c, par = comm.split_checksummed_recv(wire_back, rb, 1, R)
     rboff = comm.excl_cumsum(rb)
-    src = jnp.where(ok, jnp.take(rboff, seg) + within, 0)
-    back = jnp.where(ok[:, None], jnp.take(back_c, src, axis=0), 0)
-    return back, ok
+    expect = comm.segment_parity_words(
+        back_c, jnp.concatenate([rboff, rboff[-1:] + rb[-1:]]), rb,
+        _wire_tags(me, P, 1, incoming=True))
+    bad = jnp.any(comm.int_lane_view(par.reshape(P, -1))
+                  != comm.stored_words(expect, back_c.dtype), axis=-1)
+    if hs.kept is None:
+        # mirror path: rb == send_counts, arrivals already at origin offsets
+        send_starts = jnp.concatenate(
+            [comm.excl_cumsum(hs.send_counts),
+             hs.send_counts.sum().reshape(1).astype(jnp.int32)])
+        seg, _, ok = D.ragged_row_membership(send_starts, rb, R)
+        back = back_c
+    else:
+        send_starts = jnp.concatenate(
+            [comm.excl_cumsum(hs.send_counts),
+             hs.send_counts.sum().reshape(1).astype(jnp.int32)])
+        seg, within, ok = D.ragged_row_membership(send_starts, rb, R)
+        src = jnp.where(ok, jnp.take(rboff, seg) + within, 0)
+        back = jnp.where(ok[:, None], jnp.take(back_c, src, axis=0), 0)
+    if spec.wire_integrity == "quarantine":
+        rowbad = jnp.take(bad, seg) & ok
+        back = jnp.where(rowbad[:, None], 0, back)
+        ok = ok & ~rowbad
+        survived = ok
+    else:
+        survived = None if hs.kept is None else ok
+    return back, survived, bad.astype(jnp.float32)
 
 
 # =============================================================================
@@ -620,6 +827,16 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
     fields ``hop_max_load`` / ``hop_load_entropy`` at zero extra collective
     cost.  ``fault_plan=None`` is the production path: no injection code
     traces at all, bit-identical to the golden matrix.
+
+    **Wire integrity.**  ``cfg.wire_integrity`` (threaded onto every
+    :class:`HopSpec` by the schedule builders) arms per-segment payload
+    checksums on both directions of every ragged exchange
+    (:func:`_ragged_forward` / :func:`_ragged_reverse`): each flagged
+    source adds one event to that hop's ``fault_events`` and one count to
+    ``wire_faults[hop, src]`` — exact (hop, source rank) localization —
+    and under ``"quarantine"`` the corrupt segment is zero-filled and
+    dropped with the same exact accounting the count sanitizer uses, so a
+    value-corrupting peer costs its own tokens instead of the whole step.
     """
     if len(hops) > MAX_HOPS:
         raise ValueError(f"pipeline has {len(hops)} hops; MAX_HOPS is "
@@ -633,6 +850,8 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
     hop_faults = [zero] * MAX_HOPS
     hop_maxload = [zero] * MAX_HOPS
     hop_entropy = [jnp.float32(1.0)] * MAX_HOPS
+    hop_wire = [jnp.zeros((WIRE_SRC_BINS,), jnp.float32)] * MAX_HOPS
+    wire_used = False
 
     def run_hop(level: int, x: jax.Array, token_valid: jax.Array,
                 outer_gid: Optional[jax.Array]) -> jax.Array:
@@ -681,16 +900,26 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
                 x, gid, dec.gates, spec.num_groups, k=k, valid=dec.valid,
                 use_kernel=use_kernel, sort_impl=simpl)
             seg_lens = D.ragged_seg_lens(gid, st.keep, spec.num_groups)
-            hs, ev = _ragged_forward(rows, starts, seg_lens, spec, st.cap,
-                                     fp=fp, level=level)
-            hop_faults[level] = ev
+            hs, ev, wbad = _ragged_forward(rows, starts, seg_lens, spec,
+                                           st.cap, fp=fp, level=level)
             if innermost:
                 y_slab = experts_ffn_compact_rows(
                     wsel, hs.recv, hs.gid, hs.valid, spec.groups_per_rank,
                     act, use_kernel, sort_impl=simpl)
             else:
                 y_slab = run_hop(level + 1, hs.recv, hs.valid, hs.gid)
-            back, survived = _ragged_reverse(y_slab, hs, spec)
+            back, survived, rbad = _ragged_reverse(y_slab, hs, spec)
+            # wire verdicts: every flagged source is one fault event and one
+            # per-src-rank localization count (forward + reverse directions)
+            for verdict in (wbad, rbad):
+                if verdict is not None:
+                    nonlocal wire_used
+                    wire_used = True
+                    ev = ev + verdict.sum()
+                    hop_wire[level] = hop_wire[level].at[
+                        jnp.arange(spec.n_ranks, dtype=jnp.int32)
+                        % WIRE_SRC_BINS].add(verdict)
+            hop_faults[level] = ev
             if survived is None:
                 # capacity-free end-to-end: exact-constant 0.0, no psum
                 return D.combine(back, st)
@@ -739,8 +968,13 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
     # sanitizer events are per-device local counts -> one stacked psum per
     # layer makes them global (f-vector stats are already psum'd upstream)
     fault_vec = comm.psum(jnp.stack(hop_faults), sync)
+    # only a wire-armed trace pays the localization psum; the off policy
+    # keeps the production collective profile exactly
+    wire_vec = (comm.psum(jnp.stack(hop_wire), sync) if wire_used
+                else jnp.stack(hop_wire))
     stats = MoEStats(sum(lb_terms[1:], lb_terms[0]),
                      sum(z_terms[1:], z_terms[0]),
                      hop_vec.sum(), hop_vec, fault_vec,
-                     jnp.stack(hop_maxload), jnp.stack(hop_entropy))
+                     jnp.stack(hop_maxload), jnp.stack(hop_entropy),
+                     wire_vec)
     return y, stats

@@ -146,7 +146,8 @@ def _add_stats(a: MoEStats, b: MoEStats) -> MoEStats:
                     a.hop_drop_frac + b.hop_drop_frac,
                     a.fault_events + b.fault_events,
                     jnp.maximum(a.hop_max_load, b.hop_max_load),
-                    jnp.minimum(a.hop_load_entropy, b.hop_load_entropy))
+                    jnp.minimum(a.hop_load_entropy, b.hop_load_entropy),
+                    a.wire_faults + b.wire_faults)
 
 
 def dense_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):

@@ -96,13 +96,17 @@ class _Leaf:
         self.p, self.m, self.v = p, m, v
 
 
-def zero1_lamb_step(grads, state: Zero1State, params, lr, *,
-                    sync_axes_tree, norm_axes_tree, plan: MeshPlan,
-                    grad_clip: float = 1.0, b1=0.9, b2=0.999, eps=1e-6,
-                    weight_decay=0.01, min_trust=0.0, max_trust=10.0):
-    """One ZeRO-1 LAMB step over RAW (unreduced) per-device gradients."""
-    step = state.step + 1
+def zero1_reduce_and_clip(grads, *, sync_axes_tree, norm_axes_tree,
+                          plan: MeshPlan, grad_clip: float = 1.0):
+    """Stages 1+2 of the ZeRO-1 step: reduce RAW per-device gradients into
+    owned chunks and compute the global clip scale.
 
+    Returns ``(g_own, gnorm, scale)``.  Split out from the apply so a step
+    sentinel can judge the TRUE (post-reduction) gradients and
+    ``lax.cond``-gate :func:`zero1_apply` on the verdict — the clip scale
+    carries no optimizer state, so computing it on a step that is later
+    skipped is side-effect-free.
+    """
     # 1) reduce: scatter true grads into owned chunks (or plain psum when the
     #    leaf is fully sharded / axes empty)
     def reduce(g, axes):
@@ -124,6 +128,22 @@ def zero1_lamb_step(grads, state: Zero1State, params, lr, *,
                            is_leaf=lambda x: isinstance(x, jax.Array))
     gnorm = jnp.sqrt(sum(jax.tree.leaves(sq_tree)))
     scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+    return g_own, gnorm, scale
+
+
+def zero1_apply(g_own, scale, state: Zero1State, params, lr, *,
+                sync_axes_tree, norm_axes_tree, plan: MeshPlan,
+                b1=0.9, b2=0.999, eps=1e-6, weight_decay=0.01,
+                min_trust=0.0, max_trust=10.0):
+    """Stage 3 of the ZeRO-1 step: moment update + owned-chunk apply +
+    param re-gather, over the ALREADY-reduced chunks of
+    :func:`zero1_reduce_and_clip`.
+
+    The step counter bumps here, not in the reduce — a sentinel-skipped
+    step must leave the whole :class:`Zero1State` (moments AND bias-
+    correction clock) bit-unchanged.  Returns ``(params, Zero1State)``.
+    """
+    step = state.step + 1
 
     # 3) per-leaf update on owned chunks
     def upd(g, m, v, p, sync, shard):
@@ -161,4 +181,22 @@ def zero1_lamb_step(grads, state: Zero1State, params, lr, *,
     new_p = jax.tree.map(lambda t: t.p, out, is_leaf=is_leaf)
     new_m = jax.tree.map(lambda t: t.m, out, is_leaf=is_leaf)
     new_v = jax.tree.map(lambda t: t.v, out, is_leaf=is_leaf)
-    return new_p, Zero1State(new_m, new_v, step), gnorm
+    return new_p, Zero1State(new_m, new_v, step)
+
+
+def zero1_lamb_step(grads, state: Zero1State, params, lr, *,
+                    sync_axes_tree, norm_axes_tree, plan: MeshPlan,
+                    grad_clip: float = 1.0, b1=0.9, b2=0.999, eps=1e-6,
+                    weight_decay=0.01, min_trust=0.0, max_trust=10.0):
+    """One ZeRO-1 LAMB step over RAW (unreduced) per-device gradients.
+
+    Composition of :func:`zero1_reduce_and_clip` + :func:`zero1_apply`
+    (bit-identical to the pre-split fused step)."""
+    g_own, gnorm, scale = zero1_reduce_and_clip(
+        grads, sync_axes_tree=sync_axes_tree, norm_axes_tree=norm_axes_tree,
+        plan=plan, grad_clip=grad_clip)
+    new_p, new_state = zero1_apply(
+        g_own, scale, state, params, lr, sync_axes_tree=sync_axes_tree,
+        norm_axes_tree=norm_axes_tree, plan=plan, b1=b1, b2=b2, eps=eps,
+        weight_decay=weight_decay, min_trust=min_trust, max_trust=max_trust)
+    return new_p, new_state, gnorm

@@ -9,6 +9,27 @@ This mirrors the paper's process-group design (Fig. 5): instead of
 ``inter_node_process_group`` / ``intra_node_process_group`` objects, a named
 mesh axis *is* the process group, and ``jax.lax`` collectives over an axis
 tuple are the group collectives.
+
+**Wire-integrity format (parity rows).**  The checksummed ragged exchange
+(:func:`checksummed_ragged_all_to_all`) makes every ragged wire segment
+individually accountable without a second collective: each sender appends,
+after the data rows of each destination's segment, ``nl`` *parity rows* —
+one per (destination, local-group) sub-segment — so the wire segment for
+peer ``p`` is ``send_counts[p]`` data rows followed by ``nl`` parity rows
+and the wire counts are simply ``send_counts + nl``.  A parity row is the
+segment's int32 integrity word per model lane, stored bitcast into the
+payload dtype: ``word[lane] = fold[lane] + len * WIRE_LEN_MULT + tag *
+WIRE_TAG_MULT`` (wrapping int32), where ``fold`` is the sum over the
+segment's occupied rows of the lanes' bitcast integer views, ``len`` is
+the segment's occupied-row count and ``tag`` encodes (src rank, dst rank,
+group).  The receiver recomputes the word from the believed counts and
+payload (:func:`segment_parity_words`) and compares in the stored domain
+(:func:`stored_words` — the low 16 bits for 16-bit payload dtypes): the
+fold term catches value corruption, the length term catches in-bounds
+count inflation the grid sanitizer provably cannot see, and the tag term
+catches replayed/duplicated segments.  Verification, quarantine and event
+accounting live in ``core/pipeline``; this module only defines the wire
+format and moves the bytes.
 """
 from __future__ import annotations
 
@@ -341,6 +362,156 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
         out = out.at[idx].add(
             jnp.where((ar < cnt).reshape(bshape), slab, 0), mode="drop")
     return out, recv_counts
+
+
+# --------------------------------------------------- wire-integrity (parity)
+# Fold multipliers of the per-segment integrity word (module docstring).
+# Both odd (units mod 2^32, so distinct lengths/tags map to distinct
+# residues) and far apart so a single-row value delta cannot mimic either.
+WIRE_LEN_MULT = 1000003
+WIRE_TAG_MULT = 777767777
+
+
+def _lane_int_dtype(dtype) -> jnp.dtype:
+    """The same-width integer dtype of a payload lane."""
+    return jnp.dtype(f"int{jnp.dtype(dtype).itemsize * 8}")
+
+
+def int_lane_view(rows: jax.Array) -> jax.Array:
+    """Bitcast a float slab to int32 lanes (sign-extending 16-bit dtypes).
+
+    The integrity fold is wrapping int32 arithmetic over this view, so the
+    fold of a bf16 slab and of its f32 upcast differ — folds only compare
+    against folds of the same payload dtype, which the wire guarantees.
+    """
+    it = _lane_int_dtype(rows.dtype)
+    return lax.bitcast_convert_type(rows, it).astype(jnp.int32)
+
+
+def words_to_rows(words: jax.Array, dtype) -> jax.Array:
+    """Store int32 integrity words as rows of a ``dtype``-typed slab.
+
+    32-bit payloads hold the whole word; 16-bit payloads hold its low half
+    (``bitcast_convert_type`` to int16 splits little-endian, index 0 is the
+    low half) — 16 bits of fold still make an accidental collision a
+    1-in-65536 event per lane, and every lane must collide at once.
+    """
+    assert_count_i32(words, "words_to_rows(words)")
+    it = _lane_int_dtype(dtype)
+    if it == jnp.int32:
+        return lax.bitcast_convert_type(words, dtype)
+    return lax.bitcast_convert_type(
+        lax.bitcast_convert_type(words, it)[..., 0], dtype)
+
+
+def stored_words(words: jax.Array, dtype) -> jax.Array:
+    """Project int32 words onto the domain a ``dtype`` slab round-trips.
+
+    Expected words must be compared to received parity rows in this domain
+    — comparing the full int32 word against a 16-bit stored half would
+    flag every healthy segment.
+    """
+    return int_lane_view(words_to_rows(words, dtype))
+
+
+def segment_parity_words(rows: jax.Array, bounds: jax.Array,
+                         lens: jax.Array, tags: jax.Array) -> jax.Array:
+    """Integrity word of each segment of a concatenated-segments slab.
+
+    ``rows``: (R, d) payload; ``bounds``: (S+1,) ascending segment start
+    offsets (segment ``s`` spans ``[bounds[s], bounds[s+1])``, first
+    ``lens[s]`` rows occupied); ``tags``: (S,) int32 identity tag folded
+    into each word.  Returns (S, d) int32 words.  Pure jnp scatter-add —
+    both sides of a wire recompute it from the counts they believe, so a
+    disagreement in payload bits, occupancy or identity lands in the word.
+    """
+    from repro.core.dispatch import ragged_row_membership
+    assert_count_i32(lens, "segment_parity_words(lens)")
+    assert_count_i32(tags, "segment_parity_words(tags)")
+    S = lens.shape[0]
+    seg, _, valid = ragged_row_membership(bounds, lens, rows.shape[0])
+    contrib = jnp.where(valid[:, None], int_lane_view(rows), 0)
+    fold = jnp.zeros((S, rows.shape[1]), jnp.int32).at[
+        jnp.where(valid, seg, 0)].add(contrib)
+    return fold + (lens * WIRE_LEN_MULT + tags * WIRE_TAG_MULT)[:, None]
+
+
+def checksummed_ragged_all_to_all(rows: jax.Array, parity: jax.Array,
+                                  send_counts: jax.Array, axes: Axes, *,
+                                  recv_rows: int, recv_counts: jax.Array,
+                                  nl: int, allow_truncate: bool = False
+                                  ) -> Tuple[jax.Array, jax.Array]:
+    """Ragged All2All with per-segment parity rows riding the same slab.
+
+    ``rows``: (R, d) rank-major staged data (exactly as
+    :func:`ragged_all_to_all` takes it); ``parity``: (P*nl, d) parity rows
+    in payload dtype, destination-major (rows ``p*nl:(p+1)*nl`` ride at
+    the tail of peer ``p``'s segment).  ``recv_counts`` are the believed
+    per-source DATA counts; the wire moves ``send_counts + nl`` rows per
+    peer and ``recv_rows`` must bound the WIRE layout (data bound plus
+    ``P * nl``).  Returns ``(wire_recv, wire_recv_counts)`` — split back
+    into payload + parity with :func:`split_checksummed_recv`.
+
+    One gather builds the interleaved wire staging from ``concat([rows,
+    parity])``; the exchange itself is one ordinary
+    :func:`ragged_all_to_all` of the widened counts — no extra collective,
+    no extra count exchange, and the parity rows are subject to exactly
+    the same wire hazards as the data they guard (that is the point).
+    """
+    from repro.core.dispatch import ragged_row_membership
+    assert_count_i32(send_counts, "checksummed_ragged_all_to_all(send_counts)")
+    assert_count_i32(recv_counts, "checksummed_ragged_all_to_all(recv_counts)")
+    P = send_counts.shape[0]
+    R = rows.shape[0]
+    rest = rows.shape[1:]
+    scw = send_counts + jnp.int32(nl)
+    woff = excl_cumsum(scw)
+    bounds = jnp.concatenate([woff, woff[-1:] + scw[-1:]])
+    w_send = R + P * nl
+    seg, within, valid = ragged_row_membership(bounds, scw, w_send)
+    send_off = excl_cumsum(send_counts)
+    sc_seg = jnp.take(send_counts, seg)
+    is_data = within < sc_seg
+    src = jnp.where(is_data, jnp.take(send_off, seg) + within,
+                    R + seg * nl + (within - sc_seg))
+    ext = jnp.concatenate([rows, parity.astype(rows.dtype)], axis=0)
+    wire = jnp.where(valid.reshape((-1,) + (1,) * len(rest)),
+                     jnp.take(ext, jnp.where(valid, src, 0), axis=0), 0)
+    return ragged_all_to_all(wire, scw, axes, recv_rows=recv_rows,
+                             recv_counts=recv_counts + jnp.int32(nl),
+                             allow_truncate=allow_truncate)
+
+
+def split_checksummed_recv(wire: jax.Array, recv_counts: jax.Array, nl: int,
+                           recv_rows: int
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Split a checksummed receive back into payload slab + parity rows.
+
+    ``recv_counts``: believed per-source DATA counts (P,); ``recv_rows``:
+    the DATA slab bound.  Returns ``(data, parity)`` — ``data``
+    (recv_rows, d) laid out exactly as the plain :func:`ragged_all_to_all`
+    receive (source ``p`` at the exclusive cumsum of ``recv_counts``, zero
+    elsewhere), ``parity`` (P, nl, d) the received parity rows.  Gathers
+    clamp at the slab edge, so callers that truncated the wire bound must
+    mask out sources whose region did not fully arrive before trusting
+    either piece.
+    """
+    from repro.core.dispatch import ragged_row_membership
+    assert_count_i32(recv_counts, "split_checksummed_recv(recv_counts)")
+    P = recv_counts.shape[0]
+    rest = wire.shape[1:]
+    woff = excl_cumsum(recv_counts + jnp.int32(nl))
+    doff = excl_cumsum(recv_counts)
+    bounds = jnp.concatenate([doff, doff[-1:] + recv_counts[-1:]])
+    seg, within, valid = ragged_row_membership(bounds, recv_counts, recv_rows)
+    src = jnp.where(valid, jnp.take(woff, seg) + within, 0)
+    data = jnp.where(valid.reshape((-1,) + (1,) * len(rest)),
+                     jnp.take(wire, src, axis=0), 0)
+    pidx = (woff[:, None] + recv_counts[:, None]
+            + jnp.arange(nl, dtype=jnp.int32)[None, :])
+    parity = jnp.take(wire, pidx.reshape(-1), axis=0
+                      ).reshape((P, nl) + rest)
+    return data, parity
 
 
 # ---------------------------------------------------------------- token split

@@ -24,7 +24,7 @@ from repro.models import transformer as T
 from repro.models.layers import vocab_parallel_xent
 from repro.optim.optimizers import Optimizer, clip_by_global_norm
 from repro.optim.zero1 import (Zero1State, init_state_shapes, state_specs,
-                               zero1_lamb_step)
+                               zero1_apply, zero1_reduce_and_clip)
 from repro.train import sentinel as SEN
 from repro.sharding import comm
 from repro.sharding.compat import shard_map
@@ -94,6 +94,7 @@ def _ce_loss(params, batch, cfg: ModelConfig, plan: MeshPlan,
                # robustness feed: global sanitizer rejections + the
                # layer-worst router watchdog inputs (see train/sentinel.py)
                "fault_events": stats.fault_events.sum(),
+               "wire_faults": stats.wire_faults.sum(),
                "max_load": jnp.max(stats.hop_max_load),
                "load_entropy": jnp.min(stats.hop_load_entropy)}
     return total_grad, metrics
@@ -129,46 +130,50 @@ def train_step_fn(params, opt_state, batch, step, sent=None, *,
             batch)
         m0 = {k: jnp.float32(0.0) for k in
               ("ce", "lb", "z", "mtp", "drop_frac", "loss",
-               "fault_events", "max_load", "load_entropy")}
+               "fault_events", "wire_faults", "max_load", "load_entropy")}
         (grads, metrics), _ = jax.lax.scan(micro, (zeros, m0), mb_batch)
         grads = jax.tree.map(lambda g: g / n_micro, grads)
 
     lr = schedule(step)
     if zero1:
-        # ZeRO-1: reduce-scatter raw grads; clip+update on owned chunks;
-        # re-gather params (see optim/zero1.py)
-        params, opt_state, gnorm = zero1_lamb_step(
-            grads, opt_state, params, lr,
-            sync_axes_tree=sync_axes_tree, norm_axes_tree=norm_axes_tree,
-            plan=plan, grad_clip=tcfg.grad_clip, b1=tcfg.b1, b2=tcfg.b2,
-            eps=tcfg.eps, weight_decay=tcfg.weight_decay)
+        # ZeRO-1: reduce-scatter raw grads + global clip scale first; the
+        # apply (moments + owned-chunk update + re-gather) is a separate
+        # stage so the sentinel can gate it (see optim/zero1.py)
+        g_upd, gnorm, scale = zero1_reduce_and_clip(
+            grads, sync_axes_tree=sync_axes_tree,
+            norm_axes_tree=norm_axes_tree, plan=plan,
+            grad_clip=tcfg.grad_clip)
+        apply_fn = lambda g, o, p: zero1_apply(
+            g, scale, o, p, lr, sync_axes_tree=sync_axes_tree,
+            norm_axes_tree=norm_axes_tree, plan=plan, b1=tcfg.b1,
+            b2=tcfg.b2, eps=tcfg.eps, weight_decay=tcfg.weight_decay)
     else:
         # ---- explicit gradient reduction over replicated axes ---------------
         grads = jax.tree.map(
             lambda g, a: comm.psum(g, a) if a else g, grads, sync_axes_tree,
             is_leaf=lambda x: isinstance(x, jax.Array))
-        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip,
+        g_upd, gnorm = clip_by_global_norm(grads, tcfg.grad_clip,
                                            norm_axes_tree)
-        if sentinel:
-            # verdict AFTER grad sync + clip (non-finite values survive
-            # both), BEFORE the moments see anything — the guarded apply
-            # leaves params/opt-state bit-unchanged on a bad step
-            ok, nonfin, spike = SEN.step_verdict(metrics["loss"], grads,
-                                                 sent, plan.all_axes)
-            params, opt_state = SEN.gated_update(
-                ok,
-                lambda g, o, p: opt.update(g, o, p, lr,
-                                           shard_axes=norm_axes_tree),
-                grads, opt_state, params)
-            alarm = SEN.router_alarm(metrics["max_load"],
-                                     metrics["load_entropy"])
-            sent = SEN.update_sentinel(sent, metrics["loss"], ok, nonfin,
-                                       spike, alarm)
-            metrics = dict(metrics)
-            metrics["skip"] = (~ok).astype(jnp.float32)
-        else:
-            params, opt_state = opt.update(grads, opt_state, params, lr,
-                                           shard_axes=norm_axes_tree)
+        apply_fn = lambda g, o, p: opt.update(g, o, p, lr,
+                                              shard_axes=norm_axes_tree)
+    if sentinel:
+        # verdict AFTER grad reduction (+ clip / owned-chunk scatter —
+        # non-finite values survive both), BEFORE the moments see
+        # anything: the guarded apply leaves params/opt-state (including
+        # the ZeRO-1 sharded chunks and step clock) bit-unchanged on a
+        # bad step
+        ok, nonfin, spike = SEN.step_verdict(metrics["loss"], g_upd,
+                                             sent, plan.all_axes)
+        params, opt_state = SEN.gated_update(ok, apply_fn, g_upd,
+                                             opt_state, params)
+        alarm = SEN.router_alarm(metrics["max_load"],
+                                 metrics["load_entropy"])
+        sent = SEN.update_sentinel(sent, metrics["loss"], ok, nonfin,
+                                   spike, alarm)
+        metrics = dict(metrics)
+        metrics["skip"] = (~ok).astype(jnp.float32)
+    else:
+        params, opt_state = apply_fn(g_upd, opt_state, params)
     metrics = dict(metrics)
     metrics["grad_norm"] = gnorm
     metrics["lr"] = lr
@@ -192,11 +197,6 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
     ``repro.train.sentinel.init_sentinel_state()`` — and bad steps are
     skipped instead of applied (see ``train_step_fn``).
     """
-    if sentinel and zero1:
-        raise ValueError(
-            "sentinel=True is not supported with zero1=True: the ZeRO-1 "
-            "step fuses clip+apply over owned chunks, so the guarded "
-            "apply cannot wrap it (ROADMAP follow-up)")
     pspec = param_specs(params_like, cfg, plan)
     sync_tree = shard_axes(pspec, plan)
     norm_tree = sharded_axes_only(pspec, plan)
@@ -218,7 +218,7 @@ def build_train_step(cfg: ModelConfig, tcfg: TrainConfig, plan: MeshPlan,
         ospec = {"m": pspec, "v": pspec, "step": P()}
     bspec = batch_specs(batch_like, plan)
     mkeys = ["ce", "lb", "z", "mtp", "drop_frac", "loss", "grad_norm", "lr",
-             "fault_events", "max_load", "load_entropy"]
+             "fault_events", "wire_faults", "max_load", "load_entropy"]
     if sentinel:
         mkeys.append("skip")
     mspec = {k: P() for k in mkeys}

@@ -70,10 +70,10 @@ def primitive_skew():
         spec = PL.HopSpec(name="t", axes=plan.ep_axes, n_ranks=P_,
                           num_groups=V, exchange="ragged",
                           recv_bound_factor=factor)
-        hs, ev = PL._ragged_forward(rows, starts, seg_lens, spec, st.cap)
+        hs, ev, _ = PL._ragged_forward(rows, starts, seg_lens, spec, st.cap)
         # marker transform so reverse provenance is checkable
         y_slab = hs.recv * 2.0
-        back, ok = PL._ragged_reverse(y_slab, hs, spec)
+        back, ok, _ = PL._ragged_reverse(y_slab, hs, spec)
         nz = (jnp.abs(back).sum(-1) > 0)
         return (back[None], ok[None], hs.kept[None], hs.recv_counts[None],
                 rows[None], nz[None], st.pos[None],

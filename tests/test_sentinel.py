@@ -144,9 +144,43 @@ def test_sentinel_step_healthy_and_poisoned(tiny_setup):
     assert float(sent2.ema_steps) == 0.0
 
 
-def test_sentinel_zero1_unsupported(tiny_setup):
+def test_sentinel_zero1_poisoned(tiny_setup):
+    """Sentinel under ZeRO-1 (the split zero1_reduce_and_clip/zero1_apply):
+    a healthy sentinel step matches the sentinel-off ZeRO-1 step exactly;
+    a NaN-poisoned step leaves params AND the ZeRO-1 optimizer state
+    (moments + step clock) bit-unchanged."""
+    from repro.common.config import TrainConfig
+    from repro.train.step import build_train_step, zero1_state
     cfg, plan, params, batch, opt, sched = tiny_setup
-    with pytest.raises(ValueError, match="zero1"):
-        _ = __import__("repro.train.step", fromlist=["build_train_step"]) \
-            .build_train_step(cfg, None, plan, opt, sched, params, batch,
-                              zero1=True, sentinel=True)
+    tcfg = TrainConfig(global_batch_size=2, seq_len=16, steps=10,
+                       optimizer="lamb", sentinel=True)
+    ostate = zero1_state(params, cfg, plan)
+    p0 = jax.tree.map(np.asarray, params)
+    o0 = jax.tree.map(np.asarray, ostate)
+    step_off, _ = build_train_step(cfg, tcfg, plan, opt, sched, params,
+                                   batch, mesh=None, zero1=True)
+    step_on, _ = build_train_step(cfg, tcfg, plan, opt, sched, params,
+                                  batch, mesh=None, zero1=True,
+                                  sentinel=True)
+    sent = S.init_sentinel_state()
+
+    p_off, o_off, m_off = step_off(_fresh(p0), _fresh(o0), batch,
+                                   jnp.int32(1))
+    p_on, o_on, m_on, sent1 = step_on(_fresh(p0), _fresh(o0), batch,
+                                      jnp.int32(1), sent)
+    assert float(m_on["skip"]) == 0.0
+    assert _tree_equal(p_off, p_on) and _tree_equal(o_off, o_on)
+    assert float(sent1.steps) == 1.0 and float(sent1.skipped) == 0.0
+
+    # NaN-poisoned MoE -> NaN loss -> the gated zero1_apply never runs
+    cfg_bad = cfg.replace(moe=cfg.moe.with_options(fault_plan="nanrows"))
+    step_bad, _ = build_train_step(cfg_bad, tcfg, plan, opt, sched, params,
+                                   batch, mesh=None, zero1=True,
+                                   sentinel=True)
+    p_b, o_b, m_b, sent2 = step_bad(_fresh(p0), _fresh(o0), batch,
+                                    jnp.int32(1), sent)
+    assert not np.isfinite(float(m_b["loss"]))
+    assert float(m_b["skip"]) == 1.0
+    assert _tree_equal(p_b, p0) and _tree_equal(o_b, o0)
+    assert float(np.asarray(o_b.step)) == float(np.asarray(o0.step))
+    assert float(sent2.nonfinite) == 1.0 and float(sent2.skipped) == 1.0
