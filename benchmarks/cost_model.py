@@ -210,6 +210,62 @@ def sort_time_report(n: int, num_keys: int, hw: Hardware,
             "speedup": argsort_s / radix_s if radix_s else float("inf")}
 
 
+# ------------------------------------------------------------ routing stage
+def routing_time_report(t: int, d: int, E: int, k: int, hw: Hardware,
+                        block: int = 128) -> dict:
+    """Modeled per-hop routing-stage time: the unfused XLA op chain vs the
+    fused Pallas megakernel (:mod:`repro.kernels.router_fused`).
+
+    Both paths are charged the IDENTICAL router GEMM (``2*t*d*E`` MXU
+    flops — fusion cannot remove it) plus their HBM passes and VPU
+    elementwise work at the shared ``hw.flops / VPU_MXU_RATIO`` rate, term
+    for term against the code that actually ships:
+
+    * ``unfused`` — ``router_probs`` + ``topk_gates`` + ``ops.group_sort``
+      as separate XLA ops: the (t, E) logits tensor is written by the GEMM,
+      re-read and re-written by softmax, and the probs re-read by
+      ``lax.top_k`` — 4 full (t, E) HBM passes — plus the top-k output
+      write and a separate packed-argsort position pass over the A = t*k
+      chosen ids (:func:`sort_time_report`'s argsort term: ~log2(A)
+      streaming passes).  VPU: ~3 softmax sweeps and k max-extraction
+      sweeps over E lanes per token.
+    * ``fused`` — one kernel pass over the token tiles: logits and probs
+      are each written exactly ONCE (the z-/LB-loss contract needs them in
+      HBM) and never re-read; gates / ids / local ranks stream out once
+      (t*k each); softmax, top-k, histogram and the within-tile pairwise
+      count all run in VMEM — per assignment ``block`` pairwise compares
+      plus two lane-padded domain sweeps (the radix-kernel accounting)
+      on top of the same softmax/top-k sweeps.
+
+    The structural win is eliminating the logits/probs HBM round trips and
+    the separate O(A log A) sort pass; the GEMM and the mandatory one-time
+    writes are charged identically on both sides, so the ratio isolates
+    exactly what the fusion removes.  Same deliberate simplicity as
+    :func:`sort_time_report` (no cache effects, no overlap) — the point is
+    the structural comparison at dispatch-sized shapes, with the same
+    hardware numbers as every other report here.
+    """
+    vpu = hw.flops / VPU_MXU_RATIO
+    A = t * k
+    lanes = ((E + 127) // 128) * 128
+    gemm_s = 2 * t * d * E / hw.flops
+    te_bytes = t * E * 4                          # one fp32 (t, E) tensor
+    sort = sort_time_report(A, E + 1, hw, block)
+    unf_mem_s = (4 * te_bytes + 2 * A * 4) / hw.hbm_bw
+    unf_vpu_s = t * E * (3 + k) / vpu
+    unfused_s = gemm_s + unf_mem_s + unf_vpu_s + sort["argsort_s"]
+    fus_mem_s = (2 * te_bytes + 3 * A * 4) / hw.hbm_bw
+    fus_vpu_s = (t * E * (3 + k) + A * (block + 2 * lanes)) / vpu
+    fused_s = gemm_s + fus_mem_s + fus_vpu_s
+    return {"hw": hw.name, "t": t, "d": d, "E": E, "k": k,
+            "unfused_s": unfused_s, "fused_s": fused_s,
+            "gemm_s": gemm_s,
+            "unfused_mem_s": unf_mem_s, "unfused_vpu_s": unf_vpu_s,
+            "unfused_sort_s": sort["argsort_s"],
+            "fused_mem_s": fus_mem_s, "fused_vpu_s": fus_vpu_s,
+            "speedup": unfused_s / fused_s if fused_s else float("inf")}
+
+
 def allreduce_time(bytes_per_device: float, group: int, bw: float) -> float:
     if group <= 1:
         return 0.0

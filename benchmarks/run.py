@@ -31,7 +31,7 @@ def smoke() -> None:
     """Tiny sweeps of the two dispatch benches: compiles and runs every
     backend round trip, asserts nothing hangs, writes NO json artifacts."""
     from benchmarks import (bench_dispatch, bench_dropless, bench_radix_sort,
-                            bench_ragged_a2a)
+                            bench_ragged_a2a, bench_router_fused)
     ok = True
     ok &= _timed("smoke_dispatch", lambda: bench_dispatch.run_sweep_smoke())
     ok &= _timed("smoke_dropless", lambda: bench_dropless.run_sweep(
@@ -39,6 +39,10 @@ def smoke() -> None:
     # both group-sort impls through one jitted cell (radix = the real
     # interpret-mode Pallas counting sort), bit-identical outputs asserted
     ok &= _timed("smoke_radix_sort", bench_radix_sort.run_smoke)
+    # fused routing megakernel vs the unfused chain through one jitted
+    # dispatch-sized cell (fused = the real interpret-mode Pallas kernel),
+    # all six outputs asserted bit-identical
+    ok &= _timed("smoke_router_fused", bench_router_fused.run_smoke)
     # one jitted ragged-exchange round trip (ragged + padded wire formats)
     # on a fake 8-device mesh, in a subprocess with its own XLA_FLAGS
     ok &= _timed("smoke_ragged_a2a", bench_ragged_a2a.run_smoke)
@@ -52,11 +56,13 @@ def main() -> None:
     from benchmarks import (bench_convergence, bench_dispatch, bench_dropless,
                             bench_model_sizes, bench_moe_layer,
                             bench_pipeline_chunks, bench_radix_sort,
-                            bench_ragged_a2a, bench_scaling, bench_throughput)
+                            bench_ragged_a2a, bench_router_fused,
+                            bench_scaling, bench_throughput)
     ok = True
     # emit machine-readable BENCH_*.json alongside the CSVs
     ok &= _timed("dispatch_backends", bench_dispatch.main)
     ok &= _timed("radix_sort_vs_argsort", bench_radix_sort.main)
+    ok &= _timed("router_fused_vs_unfused", bench_router_fused.main)
     ok &= _timed("dropless_vs_capacity", bench_dropless.main)
     ok &= _timed("ragged_vs_padded_a2a", bench_ragged_a2a.main)
     ok &= _timed("table1_throughput", bench_throughput.main)

@@ -260,6 +260,13 @@ def _moe_cases():
             if backend == "dropless":
                 name += "/ragged" if ragged else "/padded"
             yield name, cfg
+        # the fused routing megakernel feeding the same dropless/ragged hop:
+        # the route decision moves through the kernel (or its oracle below
+        # the row threshold) but every collective it feeds must stay
+        # congruent with the unfused chain
+        yield (f"moe/{router}/dropless/fused",
+               base.with_options(dispatch_backend="dropless", ragged_a2a=True,
+                                 router_impl="fused"))
         # wire-integrity policies ride the ragged hops only: the parity
         # rows and per-segment verdicts must obey every collective rule
         # (int32 words, comm.py provenance, no divergent conds)

@@ -272,6 +272,7 @@ def kernel_cases() -> Iterator[Tuple[str, Callable[[], jcore.ClosedJaxpr]]]:
     from repro.kernels.moe_dispatch import (combine_gather_pallas,
                                             dispatch_gather_pallas)
     from repro.kernels.radix_sort import group_sort_pallas
+    from repro.kernels.router_fused import router_fused_pallas
     from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
     from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
@@ -280,6 +281,12 @@ def kernel_cases() -> Iterator[Tuple[str, Callable[[], jcore.ClosedJaxpr]]]:
     yield "group_sort", lambda: jax.make_jaxpr(
         lambda keys: group_sort_pallas(keys, 64))(
             jnp.zeros((1024,), i32))
+    # routing megakernel: token-tiled sequential grid carrying the expert
+    # histogram in VMEM scratch and revisiting the histogram output on the
+    # last step — the grid-race + scratch rules both bite here
+    yield "router_fused", lambda: jax.make_jaxpr(
+        lambda x, w: router_fused_pallas(x, w, 2))(
+            jnp.zeros((1024, 64), f32), jnp.zeros((64, 16), f32))
     # f = 1024 with bf = 512 keeps the innermost f axis at 2 grid steps so
     # the output-revisit detector exercises the accumulation axis
     yield "grouped_ffn", lambda: jax.make_jaxpr(

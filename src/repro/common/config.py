@@ -62,6 +62,15 @@ MOE_OPTIONS: Tuple[MoEOption, ...] = (
                    "stable sort, radix = one-pass Pallas counting sort "
                    "(TPU fast path; bit-identical)",
               dryrun_opts=(("radix_sort", "radix"),)),
+    MoEOption("router_impl", "choice", ("unfused", "fused"),
+              help="routing-stage implementation for every hop's router: "
+                   "unfused = separate fp32 GEMM + softmax + lax.top_k XLA "
+                   "ops, fused = the single-pass Pallas routing megakernel "
+                   "(repro.kernels.router_fused: GEMM, softmax, top-k, "
+                   "histogram and dispatch positions in one VMEM pass; "
+                   "bit-compatible loss inputs, interpret-validated "
+                   "off-TPU)",
+              dryrun_opts=(("fused_router", "fused"),)),
     MoEOption("recv_bound_factor", "float",
               help="ragged hops only: bound each receive slab at ~factor x "
                    "expected arrivals instead of the worst-case P x R rows "
@@ -190,6 +199,17 @@ class MoEConfig:
     # interpret-validated off-TPU).  Bit-identical outputs either way; see
     # EXPERIMENTS.md §Perf-5 and tests/test_dispatch_conformance.py.
     sort_impl: str = "argsort"
+    # routing-stage implementation, consumed where RouteDecision is built
+    # (core/moe.py router_topk, shared by switch's flat hop and both SMILE
+    # levels): "unfused" = separate fp32 GEMM + softmax + lax.top_k XLA ops
+    # (the default — fastest on this CPU container), "fused" = the
+    # single-pass Pallas routing megakernel (repro.kernels.router_fused —
+    # GEMM, softmax, top-k, histogram and dispatch positions in one VMEM
+    # pass, no logits round trip to HBM; the TPU fast path, interpret-
+    # validated off-TPU).  Loss inputs (router probs/logits) stay
+    # bit-compatible; see EXPERIMENTS.md §Perf-7 and
+    # tests/test_dispatch_conformance.py.
+    router_impl: str = "unfused"
     # ragged hops only: bound each hop's receive slab at ~factor x expected
     # arrivals (tile-aligned) instead of the zero-drop worst case of
     # n_ranks x R rows.  Arrivals beyond the bound are clamp-dropped (the
@@ -198,9 +218,11 @@ class MoEConfig:
     # bound shrinks ~n_ranks/factor-fold.  None = unbounded (bit-identical
     # zero-drop, the default).  Applies to every ragged hop — switch's flat
     # hop and both SMILE levels — through the shared HopSpec
-    # (repro.core.pipeline).  Caveat on jax >= 0.4.38: truncating hops
-    # currently force the fused-slab emulation instead of the native
-    # lax.ragged_all_to_all (a trace-time warning fires; see ROADMAP).
+    # (repro.core.pipeline).  Truncating hops stay on the native
+    # lax.ragged_all_to_all where available: both sides pre-clamp their
+    # paired sizes from the replicated count matrix
+    # (comm.clamped_segment_counts), matching the emulations' prefix
+    # truncation exactly.
     recv_bound_factor: Optional[float] = None
     # deterministic fault injection: "kind[@seed][:hop]" parsed by
     # repro.common.faultinject (counts | nanrows | dropseg | skew).  None =

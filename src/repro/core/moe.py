@@ -36,7 +36,10 @@ vs ``"dropless"`` tile-aligned ragged layouts), the exchange kind per hop
 (``local`` | ``padded`` fixed-shape All2All | ``ragged`` exact-segment
 All2All, ``MoEConfig.ragged_a2a``), the group sort implementation
 (``MoEConfig.sort_impl``: XLA argsort vs the one-pass Pallas counting
-sort), rank-major group relabeling so every wire format sees contiguous
+sort), the routing-stage implementation (``MoEConfig.router_impl``:
+separate XLA ops vs the fused Pallas routing megakernel, consumed by the
+shared :func:`router_topk` prologue every hop router calls),
+rank-major group relabeling so every wire format sees contiguous
 per-rank segments, the ragged receive-bound factor
 (``MoEConfig.recv_bound_factor`` — bounded receive slabs with clamp-drops
 echoed on the reverse path), the expert-FFN flavor (padded / ragged /
@@ -86,7 +89,8 @@ from repro.sharding import comm
 from repro.sharding.plan import MeshPlan
 
 __all__ = [
-    "MoEStats", "zero_stats", "router_probs", "topk_gates", "capacity",
+    "MoEStats", "zero_stats", "router_probs", "topk_gates", "router_topk",
+    "capacity",
     "lb_loss_terms", "scaled_lb_loss", "z_loss", "experts_ffn",
     "experts_ffn_ragged", "experts_ffn_compact", "experts_ffn_compact_rows",
     "switch_moe", "smile_moe", "moe_layer", "init_moe_params",
@@ -115,6 +119,33 @@ def topk_gates(probs: jax.Array, k: int, renorm: bool) -> Tuple[jax.Array, jax.A
     if renorm and k > 1:
         gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
     return gates, idx
+
+
+def router_topk(x: jax.Array, w: jax.Array, k: int, renorm: bool,
+                impl: str = "unfused"
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The routing prologue every hop shares: GEMM -> softmax -> top-k.
+
+    Returns ``(gates (t,k), idx (t,k), probs (t,E), logits (t,E))``.
+    ``impl`` is ``MoEConfig.router_impl``: ``"unfused"`` runs the separate
+    XLA ops above; ``"fused"`` runs the single-pass Pallas routing
+    megakernel (:func:`repro.kernels.ops.router_fused` — which also emits
+    the counting-sort dispatch positions over the chosen ids without a
+    separate sort pass), with bit-compatible outputs either way.  All three
+    hop routers — switch's flat hop and both SMILE levels — route through
+    here, so the impl switch needs zero per-caller code.
+    """
+    if impl == "fused":
+        from repro.kernels import ops as kops
+        gates, idx, probs, logits, _, _ = kops.router_fused(
+            x, w, k, renorm=renorm)
+        return gates, idx, probs, logits
+    if impl != "unfused":
+        raise ValueError(f"unknown router_impl {impl!r}; "
+                         f"expected \"unfused\" or \"fused\"")
+    probs, logits = router_probs(x, w)
+    gates, idx = topk_gates(probs, k, renorm)
+    return gates, idx, probs, logits
 
 
 def capacity(tokens: int, k: int, factor: float, groups: int) -> int:
@@ -223,8 +254,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     V = layout.virtual_total
 
     def route(xx, token_valid, outer_gid):
-        probs, logits = router_probs(xx, params["router"]["w"])     # (t, E)
-        gates, eidx = topk_gates(probs, k, renorm)
+        gates, eidx, probs, logits = router_topk(
+            xx, params["router"]["w"], k, renorm, cfg.router_impl)   # (t, E)
         # map expert -> (node, slot-in-node, expert-in-slot) -> virtual group
         e_flat = eidx.reshape(-1)                                   # (A,)
         A = e_flat.shape[0]
@@ -287,8 +318,9 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
 
     # ---------------- hop 1: route to node -----------------------------------
     def route_inter(xx, token_valid, outer_gid):
-        probs, logits = router_probs(xx, params["router_inter"]["w"])  # (t,n)
-        gates, nidx = topk_gates(probs, top_g, renorm)
+        gates, nidx, probs, logits = router_topk(
+            xx, params["router_inter"]["w"], top_g, renorm,
+            cfg.router_impl)                                           # (t,n)
         valid = (jnp.repeat(token_valid, top_g) if top_g > 1
                  else token_valid)
         return PL.RouteDecision(gates.reshape(-1), nidx.reshape(-1), valid,
@@ -306,8 +338,9 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
 
     # ---------------- hop 2: route within node -------------------------------
     def route_intra(x1, valid1, node_row):
-        probs, logits = router_probs(x1, params["router_intra"]["w"])
-        gates, qidx = topk_gates(probs, k_local, renorm)
+        gates, qidx, probs, logits = router_topk(
+            x1, params["router_intra"]["w"], k_local, renorm,
+            cfg.router_impl)
         q1 = qidx.reshape(-1)                                       # (A2,)
         A2 = q1.shape[0]
         validA = jnp.repeat(valid1, k_local) if k_local > 1 else valid1

@@ -461,13 +461,18 @@ def sanitize_len_grid(len_grid: jax.Array, block: int, src_rows: int
     quarantined source's rows simply never materialize; the echoed reverse
     hop reports them dropped with exact accounting.
 
-    Returns ``(grid, events)``: the sanitized grid and the number of
+    Returns ``(grid, events, src_bad)``: the sanitized grid, the number of
     *violating* entries (a float32 scalar — the hop's ``fault_events``
     contribution; quarantine collateral, i.e. valid entries zeroed because
     a sibling violated, is intentionally not counted so injected faults
-    have exact expected counts).  On a healthy grid this is the identity
-    with ``events == 0`` — pure integer math, bit-identical outputs
-    (pinned by the golden matrix).
+    have exact expected counts), and the (P,) bool per-source quarantine
+    mask.  The mask lets the wire-integrity verifier *deduplicate*: a
+    source zeroed here necessarily fails its payload checksum too (the
+    receiver now believes zero-length segments the sender checksummed at
+    full length), and re-flagging it would double-count the one injected
+    fault in ``fault_events``/``wire_faults``.  On a healthy grid this is
+    the identity with ``events == 0`` and an all-false mask — pure integer
+    math, bit-identical outputs (pinned by the golden matrix).
 
     Known limitation, by construction: an *in-bounds inflated* count — a
     source claiming more rows than it actually staged, within its bound —
@@ -484,8 +489,8 @@ def sanitize_len_grid(len_grid: jax.Array, block: int, src_rows: int
     over = jnp.cumsum(jnp.where(neg, 0, aligned), axis=1) > src_rows
     bad = neg | over
     events = bad.sum().astype(jnp.float32)
-    quarantined = bad.any(axis=1, keepdims=True)
-    return jnp.where(quarantined, 0, len_grid), events
+    src_bad = bad.any(axis=1)
+    return jnp.where(src_bad[:, None], 0, len_grid), events, src_bad
 
 
 @dataclasses.dataclass
@@ -581,7 +586,7 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
         len_grid = FI.inflate_grid(fp, level, len_grid)
     if inject and fp.kind == "dupseg":
         len_grid = FI.dup_grid(fp, level, len_grid)
-    len_grid, events = sanitize_len_grid(len_grid, block, R)
+    len_grid, events, san_bad = sanitize_len_grid(len_grid, block, R)
     rc = (((len_grid + block - 1) // block) * block).sum(
         axis=1).astype(jnp.int32)
     force_echo = fp is not None and fp.wants_echo
@@ -668,8 +673,13 @@ def _ragged_forward(rows: jax.Array, group_starts: jax.Array,
         != comm.stored_words(expect, recv.dtype), axis=-1).reshape(P, nl)
     # source-granular verdict: one corrupt (src, group) cell condemns the
     # whole source segment — a partially believed region would shift every
-    # later group's sub-offsets exactly like a half-believed count row
-    src_bad = bad_cell.any(axis=1) & full
+    # later group's sub-offsets exactly like a half-believed count row.
+    # A sanitizer-quarantined source is excluded: its count row was zeroed
+    # above, so its parity words trivially mismatch the (now zero-length)
+    # segments the receiver believes — re-flagging it here would charge the
+    # one injected fault twice in fault_events/wire_faults (and its rows
+    # are already zeroed/dropped via the sanitized grid)
+    src_bad = bad_cell.any(axis=1) & full & ~san_bad
     if spec.wire_integrity == "quarantine":
         rowbad = jnp.take(src_bad, sseg) & sval
         recv = jnp.where(rowbad[:, None], 0, recv)

@@ -19,6 +19,7 @@ from repro.kernels.grouped_ffn import (grouped_ffn_pallas,
 from repro.kernels.moe_dispatch import (combine_gather_pallas,
                                         dispatch_gather_pallas)
 from repro.kernels.radix_sort import group_sort_pallas
+from repro.kernels.router_fused import router_fused_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
@@ -54,6 +55,90 @@ def group_sort(keys, num_keys: int, *, impl: str = "argsort"):
     if impl == "radix" and keys.shape[0] >= RADIX_MIN_ROWS:
         return group_sort_pallas(keys, num_keys, interpret=_interpret())
     return ref.group_sort_ref(keys, num_keys)
+
+
+# the two routing-stage implementations behind MoEConfig.router_impl
+ROUTER_IMPLS = ("unfused", "fused")
+# below this many tokens the kernel-launch (or CPU interpret) overhead
+# dominates the fused win: route to the pure-jnp oracle, exactly as
+# group_sort routes tiny inputs to argsort.  Module-level so tests can
+# force the kernel on small inputs.
+ROUTER_FUSED_MIN_ROWS = 1024
+
+
+try:        # jax 0.4.x: public stop_gradient passes integer arrays through
+    from jax._src.ad_util import stop_gradient_p as _stop_gradient_p
+
+    def _stop_int_grads(x):
+        return _stop_gradient_p.bind(x)
+except ImportError:      # pragma: no cover - newer jax covers all dtypes
+    _stop_int_grads = jax.lax.stop_gradient
+
+
+def _router_fused_impl(x, w, k, renorm):
+    if x.shape[0] >= ROUTER_FUSED_MIN_ROWS:
+        return router_fused_pallas(x, w, k, renorm=renorm,
+                                   interpret=_interpret())
+    return ref.router_fused_ref(x, w, k, renorm=renorm)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _router_fused(x, w, k, renorm):
+    return _router_fused_impl(x, w, k, renorm)
+
+
+def _router_fused_fwd(x, w, k, renorm):
+    return _router_fused_impl(x, w, k, renorm), (x, w)
+
+
+def _router_fused_bwd(k, renorm, res, cts):
+    # Backward = the VJP of the pure-jnp oracle, which is bit-identical to
+    # the kernel forward, so the gradients are exact; the integer outputs
+    # (ids, ranks, starts) carry no cotangents.  This also keeps autodiff
+    # out of the Pallas body — the histogram/top-k kernel is a forward-only
+    # fusion, like the unfused chain's sort it replaces.
+    x, w = res
+    ct_gates, _ct_idx, ct_probs, ct_logits, _ct_ranks, _ct_starts = cts
+
+    def _float_outs(xx, ww):
+        gates, _i, probs, logits, _r, _s = ref.router_fused_ref(
+            xx, ww, k, renorm=renorm)
+        return gates, probs, logits
+
+    _, vjp = jax.vjp(_float_outs, x, w)
+    return vjp((ct_gates, ct_probs, ct_logits))
+
+
+_router_fused.defvjp(_router_fused_fwd, _router_fused_bwd)
+
+
+def router_fused(x, w, k, *, renorm: bool = False):
+    """Fused routing prologue — router GEMM, softmax, top-k, histogram and
+    dispatch positions in one pass (:mod:`repro.kernels.router_fused`;
+    interpret mode off-TPU) for inputs of at least ``ROUTER_FUSED_MIN_ROWS``
+    tokens; smaller inputs run the bit-identical pure-jnp oracle.  Under
+    autodiff the backward pass is the oracle chain's VJP (custom_vjp), so
+    the router-weight gradient is exact on both routes.
+
+    Returns ``(gates (t,k), idx (t,k), probs (t,E), logits (t,E),
+    ranks (t*k,), starts (E+1,))`` — the loss inputs bit-compatible with
+    the unfused ``router_probs``/``topk_gates`` chain, the positions with
+    ``group_sort`` over the chosen ids (per-expert counts are
+    ``starts[1:] - starts[:-1]``).
+    """
+    E = w.shape[-1]
+    if not 1 <= k <= E:
+        raise ValueError(f"top-k k={k} out of range for {E} experts")
+    gates, idx, probs, logits, ranks, starts = _router_fused(
+        x, w, int(k), bool(renorm))
+    # The integer outputs are routing decisions, not differentiable values.
+    # Under remat, custom_vjp instantiates their tangents as concrete float0
+    # arrays, which blow up in any downstream multiply (e.g. the combine
+    # path's group_ids * cap); jax.lax.stop_gradient is a no-op on integer
+    # dtypes, so bind the underlying primitive to restore symbolic-zero
+    # tangents — matching what the unfused chain's sort outputs carry.
+    return (gates, _stop_int_grads(idx), probs, logits,
+            _stop_int_grads(ranks), _stop_int_grads(starts))
 
 
 def grouped_ffn(x, w1, w3, w2, *, act: str = "gelu"):

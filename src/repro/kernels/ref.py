@@ -81,6 +81,43 @@ def group_sort_ref(keys, num_keys):
     return ranks, starts
 
 
+def router_fused_ref(x, w, k, *, renorm=False):
+    """Pure-jnp oracle of :func:`repro.kernels.router_fused
+    .router_fused_pallas` — the fused routing prologue.
+
+    ``x``: (t, d) tokens; ``w``: (d, E) router weights.  Returns
+    ``(gates (t,k), idx (t,k), probs (t,E), logits (t,E), ranks (t*k,),
+    starts (E+1,))``, each stage mirroring the unfused path bit for bit:
+    fp32 einsum + ``jax.nn.softmax`` (== ``core.moe.router_probs``),
+    ``k`` max-extraction rounds with the EXPLICIT lowest-expert-index
+    tie-break ``lax.top_k`` guarantees (pinned here and in the kernel so
+    the impls can never silently disagree on tied logits), optional gate
+    renormalization (== ``core.moe.topk_gates``), and the counting-sort
+    position contract over the chosen ids (== :func:`group_sort_ref`).
+    """
+    E = w.shape[1]
+    if not 1 <= k <= E:
+        raise ValueError(f"top-k {k} must be in [1, num_experts {E}]")
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    lane = jnp.arange(E, dtype=jnp.int32)[None, :]
+    work = probs
+    gsel, isel = [], []
+    for _ in range(k):
+        g = jnp.max(work, axis=-1, keepdims=True)
+        sel = jnp.min(jnp.where(work == g, lane, E), axis=-1, keepdims=True)
+        gsel.append(g)
+        isel.append(sel)
+        work = jnp.where(lane == sel, -jnp.inf, work)
+    gates = jnp.concatenate(gsel, axis=1)
+    idx = jnp.concatenate(isel, axis=1)
+    if renorm and k > 1:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    ranks, starts = group_sort_ref(idx.reshape(-1), E)
+    return gates, idx, probs, logits, ranks, starts
+
+
 def dispatch_gather_ref(x, src):
     """MoE dispatch gather. x: (T, d); src: (R,) int32 source row per
     buffer slot, -1 = empty slot -> zeros. Returns (R, d)."""

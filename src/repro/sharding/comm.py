@@ -157,6 +157,28 @@ def excl_cumsum(c: jax.Array) -> jax.Array:
                             jnp.cumsum(c).astype(jnp.int32)])[:-1]
 
 
+def clamped_segment_counts(m: jax.Array, recv_rows: int) -> jax.Array:
+    """Paired clamped sizes of a truncating ragged exchange.
+
+    ``m``: the full (P, P) count matrix (``m[s, d]`` = rows source ``s``
+    ships to destination ``d`` — every rank holds it after the native
+    path's ``all_gather``); ``recv_rows``: the static receive bound every
+    destination applies.  Segments land at their *unclamped* source-major
+    offsets (the exclusive cumsum down each column) and whatever falls past
+    the bound is prefix-truncated, so ``kept[s, d] = clip(recv_rows -
+    off[s, d], 0, m[s, d])``.
+
+    Row ``me`` of the result is a rank's clamped SEND sizes, column ``me``
+    its clamped RECV sizes: because every rank computes the same matrix,
+    sender and receiver agree on every pair — the paired offset/size
+    contract ``lax.ragged_all_to_all`` requires, with exactly the
+    emulations' truncation semantics.  Pure integer math (unit-tested
+    against the emulation oracles in ``tests/distributed/_ragged_a2a.py``).
+    """
+    off = jnp.cumsum(m, axis=0) - m           # per-column exclusive cumsum
+    return jnp.clip(recv_rows - off, 0, m)
+
+
 def _fit_counts(counts: jax.Array, seg_cap: int) -> jax.Array:
     """Clamp per-peer segment counts into the statically valid range.
 
@@ -257,12 +279,17 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
     truncated (rows simply never materialize) — the mechanism behind the
     receive-bound factor of :mod:`repro.core.pipeline`.  Both emulations
     truncate naturally (their compaction indexes past the buffer are
-    dropped); the native op's paired offset/size contract cannot, so a
-    truncating call forces the fused-slab emulation even where
-    ``lax.ragged_all_to_all`` exists (teaching the native path paired
-    clamped sizes is recorded future work).  Callers are responsible for
-    knowing which rows survived — the cumsum of ``recv_counts`` clipped to
-    ``recv_rows``.
+    dropped); the native op's paired offset/size contract cannot express an
+    out-of-bounds write, so the native path instead *pre-clamps* both sides
+    from one replicated computation: every rank derives the full (P, P)
+    count matrix it already all_gathers, applies
+    :func:`clamped_segment_counts`, and uses row ``me`` as its send sizes
+    and column ``me`` as its receive sizes — sender and receiver agree on
+    every pair by construction, and exactly the emulations'
+    prefix-truncation semantics move on the wire (asserted against both
+    emulation oracles in ``tests/distributed/_ragged_a2a.py``).  Callers
+    are responsible for knowing which rows survived — the cumsum of
+    ``recv_counts`` clipped to ``recv_rows``.
 
     The ``REPRO_RAGGED_A2A_EMULATION`` environment variable overrides an
     ``"auto"`` selection (values: ``auto``/``a2a``/``ppermute``) — the
@@ -274,18 +301,6 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
     import os
     if emulation == "auto":
         emulation = os.environ.get("REPRO_RAGGED_A2A_EMULATION", "auto")
-    if emulation == "auto" and allow_truncate:
-        if hasattr(lax, "ragged_all_to_all"):
-            # loud signal: the receive bound currently costs the native
-            # exact-segment wire path (the emulation ships the P x R slab)
-            import warnings
-            warnings.warn(
-                "ragged_all_to_all(allow_truncate=True) forces the "
-                "fused-slab emulation even though this jax has the native "
-                "op — recv_bound_factor trades the exact-segment wire win "
-                "for the bounded compute slab until the native path learns "
-                "paired clamped sizes (see ROADMAP)", stacklevel=2)
-        emulation = "a2a"
     assert_count_i32(send_counts, "ragged_all_to_all(send_counts)")
     if recv_counts is not None:
         assert_count_i32(recv_counts, "ragged_all_to_all(recv_counts)")
@@ -310,11 +325,28 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
             recv_counts = jnp.take(m, me, axis=1)
         recv_counts = _fit_counts(recv_counts, recv_rows)
         out_off = jnp.take(jnp.cumsum(m, axis=0) - m, me, axis=0)
+        send_sizes = send_counts
+        if allow_truncate:
+            # paired clamped sizes: every rank derives the same (P, P) kept
+            # matrix from the replicated count matrix, so my clamped send
+            # sizes (row me) agree with every receiver's clamped recv sizes
+            # (its column) pair for pair — prefix truncation at the
+            # unclamped source-major offsets, exactly the emulations'
+            # semantics (each kept part is a segment *prefix*, so the
+            # original send offsets stay valid)
+            kept = clamped_segment_counts(m, recv_rows)
+            send_sizes = jnp.take(kept, me, axis=0)
+            recv_sizes = jnp.clip(recv_rows - out_off, 0, recv_counts)
+            # a fully truncated segment has size 0 — pin its (dead) offset
+            # inside the buffer so offset + size <= recv_rows always holds
+            out_off = jnp.minimum(out_off, recv_rows - recv_sizes)
+        else:
+            recv_sizes = recv_counts
         out = jnp.zeros((recv_rows,) + rest, rows.dtype)
         return lax.ragged_all_to_all(
             rows, out, send_off.astype(jnp.int32),
-            send_counts.astype(jnp.int32), out_off.astype(jnp.int32),
-            recv_counts.astype(jnp.int32),
+            send_sizes.astype(jnp.int32), out_off.astype(jnp.int32),
+            recv_sizes.astype(jnp.int32),
             axis_name=naxes if len(naxes) > 1 else naxes[0]), recv_counts
     if recv_counts is None:
         recv_counts = exchange_counts(send_counts, naxes)

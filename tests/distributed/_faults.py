@@ -197,6 +197,26 @@ for router in ("switch", "smile"):
             print(f"OK {router} quarantine {kind}:{lvl} -> "
                   f"(hop {lvl}, rank {victim}) drop=1/{Pn}")
 
+    # ---- counts x quarantine: the sanitizer and the checksum verifier must
+    # not DOUBLE-count the same injected fault — a source quarantined by
+    # sanitize_len_grid trivially fails its wire parity too (the receiver
+    # now believes zero-length segments the sender checksummed full-length),
+    # so fault_events must equal the sanitizer's exact entry count alone and
+    # wire_faults must stay zero (the PR-8 known-edge, fixed + pinned here)
+    fp = FI.parse_fault_plan("counts")
+    y, df, hdf, ev, _, _, wf = run_dist(
+        cfg.with_options(wire_integrity="quarantine", fault_plan="counts"),
+        params, x)
+    expect = np.zeros(2, np.float32)
+    for lvl, (Pn, nl) in HOPS[router].items():
+        expect[lvl] = NDEV * FI.expected_count_events(fp, lvl, Pn, nl)
+    np.testing.assert_array_equal(np.asarray(ev), expect)
+    assert not np.asarray(wf).any(), (router, np.asarray(wf))
+    assert float(df) > 0.0                 # quarantined segments dropped
+    assert not np.isnan(np.asarray(y)).any()
+    print(f"OK {router} counts x quarantine deduplicated: "
+          f"events={np.asarray(ev)} wire_faults all zero")
+
     # ---- detect: same events + localization, payloads pass through -------
     fp = FI.parse_fault_plan("bitflip:0")
     Pn, nl = HOPS[router][0]

@@ -7,7 +7,14 @@ single-axis (4-rank per model column) exchanges:
 * zero rows to some ranks (including a rank that sends nothing at all);
 * ALL rows to one rank (the worst-case skew the static bound must absorb);
 * reverse exchange (send_counts = forward recv_counts) restores every
-  original segment at its original offset.
+  original segment at its original offset;
+* truncation (``allow_truncate=True`` with a ``recv_rows`` bound below the
+  worst case): both emulations prefix-truncate at the unclamped offsets
+  against a numpy truncation oracle, and ``comm.clamped_segment_counts``
+  — the paired clamped sizes the native ``lax.ragged_all_to_all`` path
+  uses — reproduces exactly the kept-row matrix the emulations realize
+  (the emulations are the semantic oracle: the installed jax predates the
+  native op, so the helper is what keeps the native path honest).
 
 Exits non-zero on any mismatch.
 """
@@ -118,6 +125,64 @@ for emu in ["a2a", "ppermute"]:
     c = np.zeros((8, 8), np.int32)
     c[:, 2] = R          # every rank ships its whole staging buffer to rank 2
     check_joint(c, "all-to-one", emu)
+
+# ---- truncation: bounded recv_rows prefix-truncates at unclamped offsets ---
+def trunc_oracle(rows, counts, bound):
+    """numpy truncation reference: segments land at their UNCLAMPED
+    source-major offsets; rows past ``bound`` never materialize.  Returns
+    ``(recv (P, bound, d), kept (P, P) [dst, src])``."""
+    P_ = rows.shape[0]
+    recv = np.zeros((P_, bound, d), rows.dtype)
+    kept = np.zeros((P_, P_), np.int32)
+    for dst in range(P_):
+        off = 0
+        for src in range(P_):
+            s0 = counts[src, :dst].sum()
+            n = counts[src, dst]
+            nk = max(0, min(n, bound - off))
+            recv[dst, off:off + nk] = rows[src, s0:s0 + nk]
+            kept[dst, src] = nk
+            off += n
+    return recv, kept
+
+
+def check_truncated(counts, bound, label, emulation):
+    Pn = 8
+    rows = np.zeros((Pn, R, d), np.float32)
+    for src in range(Pn):
+        n = counts[src].sum()
+        rows[src, :n] = (src * 1000 + np.arange(n)[:, None] * 10
+                         + np.arange(d)[None, :])
+
+    def f(r, c):
+        out, rc = comm.ragged_all_to_all(r[0], c[0], ("data", "model"),
+                                         recv_rows=bound, emulation=emulation,
+                                         allow_truncate=True)
+        return out[None], rc[None]
+
+    fsm = jax.jit(shard_map(
+        f, mesh=mesh, in_specs=(P(("data", "model")), P(("data", "model"))),
+        out_specs=(P(("data", "model")), P(("data", "model")))))
+    got, _ = fsm(jnp.asarray(rows), jnp.asarray(counts))
+    want, kept = trunc_oracle(rows, counts, bound)
+    np.testing.assert_array_equal(np.asarray(got), want, err_msg=label)
+    # the paired clamped sizes the native lax.ragged_all_to_all path uses
+    # must describe EXACTLY this truncation: kept[s, d] with row me a
+    # rank's clamped send sizes and column me its clamped recv sizes
+    kept_helper = np.asarray(
+        comm.clamped_segment_counts(jnp.asarray(counts), bound))
+    np.testing.assert_array_equal(kept_helper, kept.T, err_msg=label)
+    print(f"OK truncated {label} [{emulation}]")
+
+
+for emu in ["a2a", "ppermute"]:
+    c = rng.integers(0, R // 8, (8, 8)).astype(np.int32)
+    check_truncated(c, 8, "balanced-tight", emu)      # bound below arrivals
+    c = np.zeros((8, 8), np.int32)
+    c[:, 2] = R                                       # rank 2 overflows hard
+    check_truncated(c, 40, "all-to-one-trunc", emu)
+    c = rng.integers(0, R // 8, (8, 8)).astype(np.int32)
+    check_truncated(c, 8 * R, "bound-no-op", emu)     # bound == worst case
 
 # ---- single-axis exchange: 4 ranks over "data", per model column -----------
 # model column is part of the joint sharding but NOT of the exchange: the

@@ -14,7 +14,11 @@ land in — asserting:
   dispatch produce bit-identical position arrays for both sort impls;
 * the edge cases only partially guarded before this suite existed —
   ``num_groups == 1`` and all-assignments-dropped inputs — on every
-  backend and sort impl.
+  backend and sort impl;
+* the ``router_impl`` axis: the full matrix again with the fused Pallas
+  routing megakernel (forced through the real kernel via the
+  ``ROUTER_FUSED_MIN_ROWS`` override), every cell matching the dense
+  oracle AND its unfused sibling bit for bit — both routers.
 """
 import dataclasses
 
@@ -160,6 +164,37 @@ def test_layer_conformance(router, backend, ragged, sort_impl,
         cfg_a = dataclasses.replace(cfg, sort_impl="argsort")
         y_a, _ = M.moe_layer(params[router], x, cfg_a, PLAN, act="gelu")
         np.testing.assert_array_equal(np.asarray(y), np.asarray(y_a))
+
+
+@pytest.fixture
+def force_router_fused_kernel(monkeypatch):
+    """Route every fused-impl routing prologue through the real Pallas
+    megakernel (interpret mode on CPU) regardless of token count, so
+    "fused" cells exercise the kernel rather than the small-input oracle."""
+    monkeypatch.setattr(kops, "ROUTER_FUSED_MIN_ROWS", 0)
+
+
+@pytest.mark.parametrize("router", ["switch", "smile"])
+@pytest.mark.parametrize("backend,ragged,sort_impl", MATRIX)
+def test_layer_conformance_fused_router(router, backend, ragged, sort_impl,
+                                        layer_inputs, layer_oracle,
+                                        force_radix_kernel,
+                                        force_router_fused_kernel):
+    """The full conformance matrix again under ``router_impl="fused"``:
+    every cell — both routers, all three hops between them — must match
+    its unfused sibling BIT for BIT (the megakernel acceptance bar) and
+    the dense oracle at ample capacity."""
+    params, x = layer_inputs
+    cfg = _layer_cfg(router, backend, ragged, sort_impl)
+    y_u, _ = M.moe_layer(params[router], x, cfg, PLAN, act="gelu")
+    y, stats = M.moe_layer(params[router], x,
+                           cfg.with_options(router_impl="fused"),
+                           PLAN, act="gelu")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_u))
+    y_oracle, lb_oracle = layer_oracle[router]
+    np.testing.assert_allclose(np.asarray(y), y_oracle, rtol=1e-5, atol=1e-6)
+    assert float(stats.lb_loss) == pytest.approx(lb_oracle, rel=1e-6)
+    assert float(stats.drop_frac) == 0.0
 
 
 # ------------------------------------------------------ seeded determinism

@@ -96,6 +96,64 @@ def test_golden_equivalence(router, case, backend, ragged, sort_impl,
         np.testing.assert_allclose(s, s_g, rtol=1e-5, atol=1e-7)
 
 
+@pytest.mark.parametrize("router,case,backend,ragged,sort_impl", MATRIX)
+def test_golden_equivalence_fused_router(router, case, backend, ragged,
+                                         sort_impl, golden, golden_env,
+                                         golden_params, monkeypatch):
+    """Every golden cell again under ``router_impl="fused"`` (the real
+    Pallas megakernel, forced): the fused routing prologue must reproduce
+    the recorded pre-refactor outputs under the same per-environment
+    policy as the unfused path — bit-identically in the fixture's recorded
+    environment, tight allclose elsewhere."""
+    from repro.kernels import ops as kops
+    monkeypatch.setattr(kops, "ROUTER_FUSED_MIN_ROWS", 0)
+    params, x = golden_params
+    cfg = _layer_cfg(router, backend, ragged, sort_impl, CASES[case]
+                     ).with_options(router_impl="fused")
+    y, st = M.moe_layer(params[router], x, cfg, PLAN, act="gelu")
+    tag = f"{router}|{case}|{backend}|r{int(ragged)}|{sort_impl}"
+    y_g, s_g = golden[f"y|{tag}"], golden[f"s|{tag}"]
+    s = np.asarray([float(st.lb_loss), float(st.z_loss),
+                    float(st.drop_frac)], np.float64)
+    if golden_env:
+        np.testing.assert_array_equal(np.asarray(y), y_g)
+        np.testing.assert_array_equal(s, s_g)
+    else:
+        np.testing.assert_allclose(np.asarray(y), y_g, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(s, s_g, rtol=1e-5, atol=1e-7)
+
+
+def test_fused_route_decision_deterministic_across_recompiles(monkeypatch):
+    """Two independent jit compilations of the fused routing prologue on
+    identical inputs produce bit-identical RouteDecision inputs — gates,
+    expert ids, loss probs/logits, and the dispatch positions (the
+    histogram scratch carries across grid steps sequentially, so no
+    compilation-order freedom may leak into the counts)."""
+    from repro.kernels import ops as kops
+    monkeypatch.setattr(kops, "ROUTER_FUSED_MIN_ROWS", 0)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal((192, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+
+    def make_jit():
+        # a fresh lambda defeats jax's function-identity jit cache, forcing
+        # an independent trace + compile
+        return jax.jit(lambda a, b: kops.router_fused(a, b, 2, renorm=True))
+
+    out1 = make_jit()(x, w)
+    out2 = make_jit()(x, w)
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def make_topk_jit():
+        return jax.jit(lambda a, b: M.router_topk(a, b, 2, True, "fused"))
+
+    dec1 = make_topk_jit()(x, w)
+    dec2 = make_topk_jit()(x, w)
+    for a, b in zip(dec1, dec2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # ----------------------------------------------------------- unified stats
 def test_per_hop_drop_frac_switch(golden_params):
     """Switch is a 1-hop pipeline: slot 0 carries its (only) drop stat,
