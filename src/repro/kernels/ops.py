@@ -64,6 +64,13 @@ ROUTER_IMPLS = ("unfused", "fused")
 # group_sort routes tiny inputs to argsort.  Module-level so tests can
 # force the kernel on small inputs.
 ROUTER_FUSED_MIN_ROWS = 1024
+# degenerate expert counts stay on the oracle regardless of token count:
+# at E <= 2 the padded kernel GEMM and the unfused mat-vec associate the
+# contraction differently (1-ulp logit drift — measured, see
+# tests/test_router_fused.py), which would silently break the documented
+# bit-compatibility contract (e.g. SMILE inter-node routing on a 2-node
+# mesh clears ROUTER_FUSED_MIN_ROWS easily).
+ROUTER_FUSED_MIN_EXPERTS = 3
 
 
 try:        # jax 0.4.x: public stop_gradient passes integer arrays through
@@ -76,7 +83,8 @@ except ImportError:      # pragma: no cover - newer jax covers all dtypes
 
 
 def _router_fused_impl(x, w, k, renorm):
-    if x.shape[0] >= ROUTER_FUSED_MIN_ROWS:
+    if (x.shape[0] >= ROUTER_FUSED_MIN_ROWS
+            and w.shape[1] >= ROUTER_FUSED_MIN_EXPERTS):
         return router_fused_pallas(x, w, k, renorm=renorm,
                                    interpret=_interpret())
     return ref.router_fused_ref(x, w, k, renorm=renorm)
@@ -116,7 +124,9 @@ def router_fused(x, w, k, *, renorm: bool = False):
     """Fused routing prologue — router GEMM, softmax, top-k, histogram and
     dispatch positions in one pass (:mod:`repro.kernels.router_fused`;
     interpret mode off-TPU) for inputs of at least ``ROUTER_FUSED_MIN_ROWS``
-    tokens; smaller inputs run the bit-identical pure-jnp oracle.  Under
+    tokens and ``ROUTER_FUSED_MIN_EXPERTS`` experts; smaller inputs — and
+    degenerate E <= 2 routers, where the padded kernel GEMM drifts 1 ulp
+    from the unfused mat-vec — run the bit-identical pure-jnp oracle.  Under
     autodiff the backward pass is the oracle chain's VJP (custom_vjp), so
     the router-weight gradient is exact on both routes.
 

@@ -179,6 +179,41 @@ def clamped_segment_counts(m: jax.Array, recv_rows: int) -> jax.Array:
     return jnp.clip(recv_rows - off, 0, m)
 
 
+def native_truncation_plan(m, me, recv_rows: int):
+    """Per-rank arguments of the native truncating ragged exchange.
+
+    From the replicated (P, P) count matrix ``m`` and a rank index ``me``,
+    derive the ``(send_sizes, out_off, recv_sizes)`` triple rank ``me``
+    hands to ``lax.ragged_all_to_all`` under ``allow_truncate=True``.  All
+    three come from the one :func:`clamped_segment_counts` matrix every
+    rank computes identically, which is what makes the op's paired
+    contract hold across ranks:
+
+    * ``send_sizes`` — row ``me``: my clamped outgoing segment sizes,
+      indexed by DESTINATION rank;
+    * ``recv_sizes`` — column ``me``: my clamped incoming segment sizes,
+      indexed by SOURCE rank, equal pair-for-pair to each sender's
+      ``send_sizes[me]`` because both read the same matrix cell;
+    * ``out_off`` — where my outgoing segments land in each destination's
+      buffer: the *unclamped* source-major offsets (prefix truncation
+      keeps them valid — each kept part is a segment prefix), indexed by
+      destination like ``send_sizes``.  A fully truncated segment has
+      size 0 but an offset past the bound; pin it with its PAIRED send
+      size (same destination index space) so ``out_off + send_sizes <=
+      recv_rows`` always holds.
+
+    Pure integer math, so the cross-rank pairing is asserted numerically
+    in ``tests/distributed/_ragged_a2a.py`` even where the installed jax
+    predates the native op.
+    """
+    kept = clamped_segment_counts(m, recv_rows)
+    send_sizes = jnp.take(kept, me, axis=0)
+    recv_sizes = jnp.take(kept, me, axis=1)
+    out_off = jnp.take(jnp.cumsum(m, axis=0) - m, me, axis=0)
+    out_off = jnp.minimum(out_off, recv_rows - send_sizes)
+    return send_sizes, out_off, recv_sizes
+
+
 def _fit_counts(counts: jax.Array, seg_cap: int) -> jax.Array:
     """Clamp per-peer segment counts into the statically valid range.
 
@@ -324,23 +359,12 @@ def ragged_all_to_all(rows: jax.Array, send_counts: jax.Array, axes: Axes,
         if recv_counts is None:
             recv_counts = jnp.take(m, me, axis=1)
         recv_counts = _fit_counts(recv_counts, recv_rows)
-        out_off = jnp.take(jnp.cumsum(m, axis=0) - m, me, axis=0)
-        send_sizes = send_counts
         if allow_truncate:
-            # paired clamped sizes: every rank derives the same (P, P) kept
-            # matrix from the replicated count matrix, so my clamped send
-            # sizes (row me) agree with every receiver's clamped recv sizes
-            # (its column) pair for pair — prefix truncation at the
-            # unclamped source-major offsets, exactly the emulations'
-            # semantics (each kept part is a segment *prefix*, so the
-            # original send offsets stay valid)
-            kept = clamped_segment_counts(m, recv_rows)
-            send_sizes = jnp.take(kept, me, axis=0)
-            recv_sizes = jnp.clip(recv_rows - out_off, 0, recv_counts)
-            # a fully truncated segment has size 0 — pin its (dead) offset
-            # inside the buffer so offset + size <= recv_rows always holds
-            out_off = jnp.minimum(out_off, recv_rows - recv_sizes)
+            send_sizes, out_off, recv_sizes = native_truncation_plan(
+                m, me, recv_rows)
         else:
+            out_off = jnp.take(jnp.cumsum(m, axis=0) - m, me, axis=0)
+            send_sizes = send_counts
             recv_sizes = recv_counts
         out = jnp.zeros((recv_rows,) + rest, rows.dtype)
         return lax.ragged_all_to_all(

@@ -12,9 +12,13 @@ single-axis (4-rank per model column) exchanges:
   worst case): both emulations prefix-truncate at the unclamped offsets
   against a numpy truncation oracle, and ``comm.clamped_segment_counts``
   — the paired clamped sizes the native ``lax.ragged_all_to_all`` path
-  uses — reproduces exactly the kept-row matrix the emulations realize
-  (the emulations are the semantic oracle: the installed jax predates the
-  native op, so the helper is what keeps the native path honest).
+  uses — reproduces exactly the kept-row matrix the emulations realize,
+  and every rank's full ``comm.native_truncation_plan`` argument triple
+  satisfies the op's cross-rank paired contract (sender ``s``'s
+  ``send_sizes[d]`` == receiver ``d``'s ``recv_sizes[s]``; live segments
+  at the unclamped offsets; ``out_off + send_sizes <= bound``).  The
+  emulations are the semantic oracle: the installed jax predates the
+  native op, so these checks are what keep the native path honest.
 
 Exits non-zero on any mismatch.
 """
@@ -172,6 +176,23 @@ def check_truncated(counts, bound, label, emulation):
     kept_helper = np.asarray(
         comm.clamped_segment_counts(jnp.asarray(counts), bound))
     np.testing.assert_array_equal(kept_helper, kept.T, err_msg=label)
+    # the full per-rank argument triples of the native path: every rank's
+    # plan must satisfy lax.ragged_all_to_all's cross-rank paired contract
+    # (sender s's send_sizes[d] == receiver d's recv_sizes[s]) and stay in
+    # bounds — exercised numerically because no CI jax has the native op
+    plans = [tuple(np.asarray(a) for a in
+                   comm.native_truncation_plan(jnp.asarray(counts), r, bound))
+             for r in range(Pn)]
+    for s in range(Pn):
+        send_sizes, out_off, recv_sizes = plans[s]
+        np.testing.assert_array_equal(send_sizes, kept[:, s], err_msg=label)
+        np.testing.assert_array_equal(recv_sizes, kept[s], err_msg=label)
+        for dst in range(Pn):
+            assert send_sizes[dst] == plans[dst][2][s], (label, s, dst)
+            assert 0 <= out_off[dst], (label, s, dst)
+            assert out_off[dst] + send_sizes[dst] <= bound, (label, s, dst)
+            if send_sizes[dst]:     # live segments land at unclamped offsets
+                assert out_off[dst] == counts[:s, dst].sum(), (label, s, dst)
     print(f"OK truncated {label} [{emulation}]")
 
 

@@ -20,8 +20,9 @@ executor otherwise runs (``core.moe.router_probs`` + ``topk_gates`` +
 Degenerate expert counts (E <= 2) are excluded from the property domain:
 there the padded kernel GEMM and the unfused mat-vec associate the
 contraction differently (1-ulp logit drift — measured, not hypothesized);
-production never routes over fewer than 4 experts and the wrapper's
-``ROUTER_FUSED_MIN_ROWS`` keeps tiny inputs on the oracle regardless.
+the wrapper's ``ROUTER_FUSED_MIN_EXPERTS`` gate pins those widths to the
+oracle at any token count (asserted below), and ``ROUTER_FUSED_MIN_ROWS``
+keeps tiny inputs on the oracle regardless.
 """
 import jax
 import jax.numpy as jnp
@@ -154,6 +155,29 @@ def test_ops_wrapper_threshold_switch(monkeypatch):
     forced = kops.router_fused(x, w, 2, renorm=True)     # kernel route
     for a, b in zip(small, forced):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ops_wrapper_degenerate_experts_stay_on_oracle(monkeypatch):
+    """E <= 2 routes to the oracle even above ROUTER_FUSED_MIN_ROWS (the
+    padded kernel GEMM has measured 1-ulp logit drift there — module
+    docstring), preserving the bit-compat contract for e.g. SMILE
+    inter-node routing on a 2-node mesh.  E = ROUTER_FUSED_MIN_EXPERTS is
+    the first kernel-eligible width."""
+    monkeypatch.setattr(kops, "ROUTER_FUSED_MIN_ROWS", 0)
+    monkeypatch.setattr(kops, "router_fused_pallas",
+                        lambda *a, **kw: pytest.fail(
+                            "kernel must not run for E <= 2"))
+    rng = np.random.default_rng(11)
+    for e, k in [(1, 1), (2, 1), (2, 2)]:
+        x = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((16, e)), jnp.float32)
+        out = kops.router_fused(x, w, k, renorm=True)    # oracle route
+        _check_against_unfused(x, w, k, True, out)
+    x = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (16, kops.ROUTER_FUSED_MIN_EXPERTS)), jnp.float32)
+    with pytest.raises(pytest.fail.Exception, match="must not run"):
+        kops.router_fused(x, w, 2)                       # kernel route
 
 
 def test_router_fused_gradients_match_unfused(monkeypatch):
