@@ -31,7 +31,8 @@ def smoke() -> None:
     """Tiny sweeps of the two dispatch benches: compiles and runs every
     backend round trip, asserts nothing hangs, writes NO json artifacts."""
     from benchmarks import (bench_dispatch, bench_dropless, bench_radix_sort,
-                            bench_ragged_a2a, bench_router_fused)
+                            bench_ragged_a2a, bench_router_fused,
+                            bench_serving)
     ok = True
     ok &= _timed("smoke_dispatch", lambda: bench_dispatch.run_sweep_smoke())
     ok &= _timed("smoke_dropless", lambda: bench_dropless.run_sweep(
@@ -46,6 +47,9 @@ def smoke() -> None:
     # one jitted ragged-exchange round trip (ragged + padded wire formats)
     # on a fake 8-device mesh, in a subprocess with its own XLA_FLAGS
     ok &= _timed("smoke_ragged_a2a", bench_ragged_a2a.run_smoke)
+    # one tiny Poisson trace end to end through the paged continuous-
+    # batching engine (replayability + compile-count invariants asserted)
+    ok &= _timed("smoke_serving", bench_serving.run_smoke)
     sys.exit(0 if ok else 1)
 
 
@@ -57,7 +61,7 @@ def main() -> None:
                             bench_model_sizes, bench_moe_layer,
                             bench_pipeline_chunks, bench_radix_sort,
                             bench_ragged_a2a, bench_router_fused,
-                            bench_scaling, bench_throughput)
+                            bench_scaling, bench_serving, bench_throughput)
     ok = True
     # emit machine-readable BENCH_*.json alongside the CSVs
     ok &= _timed("dispatch_backends", bench_dispatch.main)
@@ -65,6 +69,7 @@ def main() -> None:
     ok &= _timed("router_fused_vs_unfused", bench_router_fused.main)
     ok &= _timed("dropless_vs_capacity", bench_dropless.main)
     ok &= _timed("ragged_vs_padded_a2a", bench_ragged_a2a.main)
+    ok &= _timed("serving_closed_loop", bench_serving.main)
     ok &= _timed("table1_throughput", bench_throughput.main)
     ok &= _timed("table2_model_sizes", bench_model_sizes.main)
     ok &= _timed("table3_moe_layer", bench_moe_layer.main)

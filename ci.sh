@@ -22,6 +22,14 @@
 #                           rogue lax collectives) — exits nonzero on any
 #                           finding (the targeted gate for kernel, comm,
 #                           and config-surface changes)
+#   ./ci.sh --serve         serving gate only: paged-KV-cache + continuous-
+#                           batching engine tests (allocator invariants,
+#                           paged-vs-ring equivalence across page
+#                           boundaries, dirty-page reuse, recompile
+#                           determinism, scheduler starvation/determinism)
+#                           plus one tiny Poisson trace through
+#                           bench_serving --smoke — the targeted gate for
+#                           serve/, paged-attention, and decode-path changes
 #   ./ci.sh --faults        fault-contained-runtime gate only: the step
 #                           sentinel (skip semantics, spike/non-finite
 #                           verdicts, the gated ZeRO-1 apply), the hardened
@@ -53,6 +61,15 @@ if [[ "${1:-}" == "--static" ]]; then
     echo "== static analyzer =="
     python -m repro.launch.analyze
     echo "CI OK (static)"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve" ]]; then
+    echo "== serving gate: paged KV cache + continuous batching =="
+    python -m pytest -q tests/test_kvcache.py tests/test_serving.py \
+        "tests/test_distributed.py::test_decode_equivalence"
+    python -m benchmarks.bench_serving --smoke
+    echo "CI OK (serve)"
     exit 0
 fi
 

@@ -330,6 +330,38 @@ def _trace_train(sentinel: bool, mesh, plan):
     return jax.make_jaxpr(lambda *a: step(*a))(*args)
 
 
+def _trace_serve(mesh, plan):
+    """Serving entrypoints: the fused batched decode tick (paged KV scatter/
+    gather + the masked MoE decode hop) and one bucketed prefill chunk.
+    Unregistered entrypoints are invisible to ``./ci.sh --static`` — these
+    are the jitted callables ``repro.serve.engine.Engine`` drives."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_reduced
+    from repro.models.transformer import init_model
+    from repro.serve import kvcache as KVC
+    from repro.serve.engine import (build_paged_decode_step,
+                                    build_paged_prefill)
+
+    cfg = get_reduced("qwen3-moe-30b-a3b")     # MoE arch -> decode hop traced
+    params = init_model(jax.random.PRNGKey(0), cfg, plan)
+    page, pool_pages, n_slots, mp = 4, 16, 4, 4
+    caches = KVC.init_paged_caches(cfg, pool_pages, page, plan)
+    table = jnp.zeros((n_slots, mp), jnp.int32)
+
+    decode = build_paged_decode_step(cfg, plan, params, caches, mesh)
+    dargs = (params, jnp.zeros((n_slots,), jnp.int32), caches, table,
+             jnp.zeros((n_slots,), jnp.int32),
+             jnp.ones((n_slots,), bool))
+    yield "serve/decode_tick", jax.make_jaxpr(lambda *a: decode(*a))(*dargs)
+
+    prefill = build_paged_prefill(cfg, plan, params, caches, mesh)
+    pargs = (params, jnp.zeros((1, 8), jnp.int32), caches, table[:1],
+             jnp.int32(0), jnp.int32(8))
+    yield ("serve/prefill_chunk",
+           jax.make_jaxpr(lambda *a: prefill(*a))(*pargs))
+
+
 def iter_entrypoints() -> Iterator[Tuple[str, jcore.ClosedJaxpr]]:
     """Trace the registered entrypoint grid on the 8-fake-device mesh."""
     from repro.sharding.compat import make_mesh
@@ -350,6 +382,7 @@ def iter_entrypoints() -> Iterator[Tuple[str, jcore.ClosedJaxpr]]:
     for sentinel in (False, True):
         name = f"train_step/{'sentinel' if sentinel else 'plain'}"
         yield name, _trace_train(sentinel, train_mesh, train_plan)
+    yield from _trace_serve(train_mesh, train_plan)
 
 
 def run(log=None) -> List[Finding]:

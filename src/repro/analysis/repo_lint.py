@@ -45,6 +45,13 @@ TRAIN_STRUCTURAL = frozenset({
     "b1", "b2", "schedule", "mlm_mask_prob", "seed", "log_every",
 })
 
+# ServeConfig fields that describe the workload shape (request geometry /
+# sampling), not engine knobs; the engine knobs (page pool geometry, slots,
+# buckets, admission) live in SERVE_OPTIONS.
+SERVE_STRUCTURAL = frozenset({
+    "batch_size", "prompt_len", "max_new_tokens", "cache_len", "temperature",
+})
+
 # Registry entries that are launcher actions, not config fields.
 LAUNCHER_ONLY = frozenset({"resume"})
 
@@ -95,9 +102,10 @@ def check_config_registry(config_path: str) -> List[Finding]:
         return [Finding("repo", "parse-error",
                         f"cannot parse {config_path}", config_path)]
     findings: List[Finding] = []
-    for cls, registry, structural in (
-            ("MoEConfig", "MOE_OPTIONS", MOE_STRUCTURAL),
-            ("TrainConfig", "TRAIN_OPTIONS", TRAIN_STRUCTURAL)):
+    for cls, registry, structural, prefix in (
+            ("MoEConfig", "MOE_OPTIONS", MOE_STRUCTURAL, "MOE"),
+            ("TrainConfig", "TRAIN_OPTIONS", TRAIN_STRUCTURAL, "TRAIN"),
+            ("ServeConfig", "SERVE_OPTIONS", SERVE_STRUCTURAL, "SERVE")):
         fields = _dataclass_fields(tree, cls)
         registered = _registry_fields(tree, registry)
         if not fields or not registered:
@@ -112,7 +120,7 @@ def check_config_registry(config_path: str) -> List[Finding]:
                 f"{cls}.{f} is neither registered in {registry} nor in the "
                 f"structural whitelist — an unregistered knob is "
                 f"unreachable from both launchers (register it, or add it "
-                f"to {'MOE' if cls == 'MoEConfig' else 'TRAIN'}_STRUCTURAL "
+                f"to {prefix}_STRUCTURAL "
                 f"in repro.analysis.repo_lint if it is model structure)",
                 config_path))
         for f in sorted(registered - fields - LAUNCHER_ONLY):

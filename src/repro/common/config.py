@@ -152,6 +152,41 @@ TRAIN_DRYRUN_OPTS = {tok: {o.field: val}
 MOE_DRYRUN_OPTS = {tok: {**dict(o.requires), o.field: val}
                    for o in MOE_OPTIONS for tok, val in o.dryrun_opts}
 
+# =============================================================================
+# Serving options registry — same record type and derivation contract:
+# ``launch/serve.py`` generates one CLI flag per entry, and
+# ``analysis/repo_lint.check_config_registry`` enforces the two-way mapping
+# against :class:`ServeConfig` (every registry field exists on the config;
+# every non-structural config field has a registry entry).  These are the
+# continuous-batching engine knobs (``repro.serve.engine``): page-pool
+# geometry, slot count, prefill bucketing, and the admission policy.
+# =============================================================================
+
+SERVE_OPTIONS: Tuple[MoEOption, ...] = (
+    MoEOption("page_size", "int",
+              help="paged KV cache: tokens per page (pool granularity; small "
+                   "pages waste less tail space but grow the page table)"),
+    MoEOption("pool_pages", "int",
+              help="paged KV cache: total pages preallocated per layer "
+                   "(0 = derive n_slots * ceil(cache_len / page_size), i.e. "
+                   "every slot can hold a full-length sequence)"),
+    MoEOption("n_slots", "int",
+              help="continuous batching: sequences in flight per decode tick "
+                   "(the fused batched decode step is compiled once at this "
+                   "batch)"),
+    MoEOption("prefill_buckets", "str",
+              help="comma-separated prefill chunk lengths, each compiled "
+                   "once (empty = derive doubling sizes up to cache_len); "
+                   "long prompts prefill chunk-by-chunk across ticks so they "
+                   "never stall the decode tick"),
+    MoEOption("admit_policy", "choice", ("fcfs", "sjf"),
+              help="admission order for waiting requests: fcfs = arrival "
+                   "order (starvation-free), sjf = shortest prompt first "
+                   "(lower mean TTFT, can starve long prompts)"),
+)
+
+SERVE_OPTION_FIELDS = {o.field: o for o in SERVE_OPTIONS}
+
 
 @dataclass(frozen=True)
 class MoEConfig:
@@ -499,6 +534,21 @@ class ServeConfig:
     max_new_tokens: int = 32
     cache_len: int = 0                  # 0 -> prompt_len + max_new_tokens
     temperature: float = 0.0            # 0 -> greedy
+    # continuous-batching engine knobs (SERVE_OPTIONS registry; see
+    # repro.serve.engine and repro.serve.kvcache)
+    page_size: int = 16                 # tokens per KV page
+    pool_pages: int = 0                 # 0 -> n_slots * ceil(cache_len/page)
+    n_slots: int = 8                    # fused decode batch (compiled once)
+    prefill_buckets: str = ""           # csv chunk lens; "" -> doubling
+    admit_policy: str = "fcfs"          # fcfs | sjf
+
+    def resolved_cache_len(self) -> int:
+        return self.cache_len or (self.prompt_len + self.max_new_tokens)
+
+    def resolved_pool_pages(self) -> int:
+        import math as _m
+        per_seq = _m.ceil(self.resolved_cache_len() / self.page_size)
+        return self.pool_pages or self.n_slots * per_seq
 
 
 # The four assigned input shapes -------------------------------------------------

@@ -235,11 +235,14 @@ def _exchange_kind(cfg: MoEConfig, n_ranks: int, innermost: bool) -> str:
 
 def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
                *, act: str = "gelu", renorm: bool = False,
-               use_kernel: bool = False) -> Tuple[jax.Array, MoEStats]:
+               use_kernel: bool = False,
+               token_valid=None) -> Tuple[jax.Array, MoEStats]:
     """One-hop MoE layer over local tokens ``x``: (t, d) -> (t, d).
 
     A single :class:`~repro.core.pipeline.ExpertHop` spanning the whole
     (inter x intra) expert grid; all mechanics live in the executor.
+    ``token_valid`` (t,) bool masks dead rows (decode ticks); ``None``
+    means all valid.
     """
     t, d = x.shape
     n_g, m_g = _grid(cfg, plan)
@@ -286,7 +289,7 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     assert n_groups == spec.groups_per_rank, (n_groups, spec)
     return execute_pipeline(x, [PL.ExpertHop(route, spec)], wsel, cfg,
                             act=act, use_kernel=use_kernel,
-                            sync=_sync_axes(plan))
+                            sync=_sync_axes(plan), token_valid=token_valid)
 
 
 # =============================================================================
@@ -295,7 +298,8 @@ def switch_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
 
 def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
               *, act: str = "gelu", renorm: bool = False, top_g: int = 1,
-              use_kernel: bool = False) -> Tuple[jax.Array, MoEStats]:
+              use_kernel: bool = False,
+              token_valid=None) -> Tuple[jax.Array, MoEStats]:
     """Bi-level MoE layer over local tokens ``x``: (t, d) -> (t, d).
 
     Hop 1: inter-node router p (t, n) over ``plan.ep_inter``.  Hop 2
@@ -379,7 +383,8 @@ def smile_moe(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
     assert n_groups == spec2.groups_per_rank, (n_groups, spec2)
     return execute_pipeline(
         x, [PL.ExpertHop(route_inter, spec1), PL.ExpertHop(route_intra, spec2)],
-        wsel, cfg, act=act, use_kernel=use_kernel, sync=_sync_axes(plan))
+        wsel, cfg, act=act, use_kernel=use_kernel, sync=_sync_axes(plan),
+        token_valid=token_valid)
 
 
 # =============================================================================
@@ -419,11 +424,18 @@ def init_moe_params(key: jax.Array, cfg: MoEConfig, d_model: int,
 
 
 def moe_layer(params: Dict, x: jax.Array, cfg: MoEConfig, plan: MeshPlan,
-              *, act: str = "gelu",
-              use_kernel: bool = False) -> Tuple[jax.Array, MoEStats]:
-    """Dispatch to the configured routing schedule. ``x``: (t, d) local tokens."""
+              *, act: str = "gelu", use_kernel: bool = False,
+              token_valid=None) -> Tuple[jax.Array, MoEStats]:
+    """Dispatch to the configured routing schedule. ``x``: (t, d) local tokens.
+
+    ``token_valid`` (t,) bool, optional: live-token mask for decode-shaped
+    calls (continuous-batching ticks where some slots are dead).  Invalid
+    rows route nowhere — zero ragged segments on the wire, excluded from
+    LB/z losses — and combine to exactly zero.
+    """
     if cfg.router == "smile":
         return smile_moe(params, x, cfg, plan, act=act, renorm=cfg.renorm_gates,
-                         top_g=cfg.top_g, use_kernel=use_kernel)
+                         top_g=cfg.top_g, use_kernel=use_kernel,
+                         token_valid=token_valid)
     return switch_moe(params, x, cfg, plan, act=act, renorm=cfg.renorm_gates,
-                      use_kernel=use_kernel)
+                      use_kernel=use_kernel, token_valid=token_valid)

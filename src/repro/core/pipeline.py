@@ -813,13 +813,25 @@ def _occupancy(st: D.CombineState, A: int) -> jax.Array:
 
 def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
                      wsel: Dict[str, jax.Array], cfg, *, act: str,
-                     use_kernel: bool, sync) -> Tuple[jax.Array, MoEStats]:
+                     use_kernel: bool, sync,
+                     token_valid: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, MoEStats]:
     """Run a routing schedule expressed as a hop pipeline.
 
     ``x``: (t, d) local tokens; ``hops``: outermost-first; ``wsel``: this
     device's expert weights, (gpr_innermost, d, f) groups in local order;
     ``cfg``: :class:`repro.common.config.MoEConfig` (dispatch backend, sort
     impl, z coefficient); ``sync``: mesh axes for globally-averaged stats.
+
+    ``token_valid`` (t,) bool masks the *top-level* tokens: invalid rows are
+    excluded from every hop's LB/z losses, contribute zero dispatch
+    assignments (so ragged hops put zero segments for them on the wire and
+    the ``recv_bound_factor`` receive bound sizes itself over live tokens
+    only), and combine to exactly zero output.  ``None`` (the default) is
+    the all-valid training/prefill path, bit-identical to the pre-serving
+    pipeline.  This is the decode-tick contract: a continuous-batching
+    engine passes its live-slot mask here so dead slots cost nothing on
+    the expert wire.
 
     Returns ``(y, stats)`` with ``y`` (t, d) gate-weighted combined outputs
     and one :class:`MoEStats` accumulated across all hops (lb and z losses
@@ -973,7 +985,9 @@ def execute_pipeline(x: jax.Array, hops: Sequence[ExpertHop],
         return D.combine(back, st)
 
     t = x.shape[0]
-    y = run_hop(0, x, jnp.ones((t,), bool), None)
+    if token_valid is None:
+        token_valid = jnp.ones((t,), bool)
+    y = run_hop(0, x, token_valid, None)
     hop_vec = jnp.stack(hop_drops)
     # sanitizer events are per-device local counts -> one stacked psum per
     # layer makes them global (f-vector stats are already psum'd upstream)

@@ -58,13 +58,17 @@ def rope_frequencies(dim: int, theta: float) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
-    """x: (..., T, H, hd); positions: (T,) absolute positions."""
+    """x: (..., T, H, hd); positions: (T,) shared or (B, T) per-row absolute
+    positions (continuous-batching decode, where every slot sits at its own
+    sequence position)."""
     hd = x.shape[-1]
     freqs = rope_frequencies(hd, theta)                       # (hd/2,)
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]   # (T, hd/2)
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs  # (..., T, hd/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    cos = cos[None, :, None, :]
-    sin = sin[None, :, None, :]
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    cos = cos[..., :, None, :]                    # (B|1, T, 1, hd/2)
+    sin = sin[..., :, None, :]
     x1, x2 = jnp.split(x, 2, axis=-1)
     out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
     return out.astype(x.dtype)
@@ -287,6 +291,9 @@ def attention_forward(p: Dict, x: jax.Array, cfg: ModelConfig, plan: MeshPlan,
                                 causal=cfg.causal, window=window,
                                 use_kernel=use_kernel)
         new_cache = None
+    elif "pool_k" in cache:
+        out, new_cache = paged_attention(q, k, v, cache, positions, cfg, plan,
+                                         h_loc=h_loc, window=window)
     elif cfg.kv_seq_shard and plan.tp > 1:
         # beyond-paper: the cache's SEQUENCE dim is sharded over tp (flash-
         # decoding style). Each rank owns a W/tp slice, scatters this step's
@@ -346,6 +353,98 @@ def init_attention_cache(cfg: ModelConfig, batch: int, length: int,
         "v": jnp.zeros((batch, length, KV, hd), dtype),
         "pos": jnp.full((length,), -1, jnp.int32),
     }
+
+
+# =============================================================================
+# Paged KV cache — page-pool scatter write + page-table gather read
+# =============================================================================
+
+def init_paged_kv_cache(cfg: ModelConfig, pool_pages: int, page_size: int,
+                        dtype=jnp.bfloat16) -> Dict:
+    """One layer's slice of the shared page pool (no batch dim — sequences
+    own pages through the per-tick page ``table``, not through a slot dim).
+
+    GLOBAL shapes; ``sharding.specs`` shards the KV-head dim over tp when it
+    divides. The page table itself is NOT part of the cache tree: the host
+    scheduler owns it (admit/evict rewrite rows between ticks) and the engine
+    injects a broadcast copy per layer each step (see ``serve.kvcache``).
+    """
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "pool_k": jnp.zeros((pool_pages, page_size, KV, hd), dtype),
+        "pool_v": jnp.zeros((pool_pages, page_size, KV, hd), dtype),
+    }
+
+
+def paged_attention(q: jax.Array, k: jax.Array, v: jax.Array, cache: Dict,
+                    positions: jax.Array, cfg: ModelConfig, plan: MeshPlan,
+                    *, h_loc: int, window: int = 0
+                    ) -> Tuple[jax.Array, Dict]:
+    """Paged-KV attention step: scatter this tick's KV into the page pool,
+    gather each sequence's view through its page-table row, attend with a
+    direct fp32 softmax over the gathered view.
+
+    q/k/v: (B, T, h, hd) fresh (rope-applied) projections. ``positions``:
+    (B, T) int32 per-row absolute positions; **-1 marks dead rows** — their
+    KV scatter is dropped and their output is finite garbage the caller must
+    ignore. cache: ``pool_k``/``pool_v`` (P, page, KVs, hd) plus ``table``
+    (B, max_pages) int32 of sequence-ordered page ids (entries >= P or < 0
+    are unmapped).
+
+    Gathered index ``s`` of a row's view IS sequence position ``s`` (pages
+    are sequence-ordered in the table), so the single mask ``s <= q_pos``
+    enforces causality AND hides stale data in reused ("dirty") pages — a
+    freed page re-allocated to a new sequence needs no zeroing because
+    positions the new sequence hasn't written yet are all ``> q_pos``.
+    """
+    assert cfg.causal, "paged attention path is causal-only"
+    pool_k, pool_v, table = cache["pool_k"], cache["pool_v"], cache["table"]
+    P, page = pool_k.shape[0], pool_k.shape[1]
+    B, T = q.shape[:2]
+    mp = table.shape[1]
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    KVs, hd = k.shape[2], q.shape[-1]
+
+    # ---- scatter write: token (b, t) at position s -> (table[b, s//page],
+    # s % page); dead rows and rows past the table extent get the sentinel
+    # page id P, which is out of range -> mode="drop" discards the write
+    # (NOT -1: negative indices would wrap to the end of the pool).
+    ps = jnp.clip(positions, 0, None)
+    slot = ps // page
+    pidx = jnp.take_along_axis(table, jnp.clip(slot, 0, mp - 1), axis=1)
+    ok = (positions >= 0) & (slot < mp) & (pidx >= 0) & (pidx < P)
+    pidx = jnp.where(ok, pidx, P).reshape(-1)                  # (B*T,)
+    off = (ps % page).reshape(-1)
+    pool_k = pool_k.at[pidx, off].set(k.reshape(B * T, KVs, hd), mode="drop")
+    pool_v = pool_v.at[pidx, off].set(v.reshape(B * T, KVs, hd), mode="drop")
+
+    # ---- gather read: (B, mp, page, KVs, hd) -> per-sequence (B, Lk) view
+    tbl = jnp.clip(table, 0, P - 1)
+    Lk = mp * page
+    k_view = jnp.take(pool_k, tbl, axis=0).reshape(B, Lk, KVs, hd)
+    v_view = jnp.take(pool_v, tbl, axis=0).reshape(B, Lk, KVs, hd)
+    k_use = _kv_slice_for_my_heads(k_view, h_loc, H, KV, plan)
+    v_use = _kv_slice_for_my_heads(v_view, h_loc, H, KV, plan)
+
+    # ---- direct fp32 softmax over the gathered view (decode ticks are one
+    # token x a short view; the streaming chunked kernel buys nothing here)
+    KVl = k_use.shape[2]
+    g = h_loc // KVl
+    scale = 1.0 / math.sqrt(hd)
+    qf = (q * scale).astype(jnp.float32).reshape(B, T, KVl, g, hd)
+    s = jnp.einsum("btkgh,bskh->btkgs", qf, k_use.astype(jnp.float32))
+    sidx = jnp.arange(Lk)
+    mask = sidx[None, None, None, None, :] <= positions[:, :, None, None, None]
+    if window:
+        mask &= (positions[:, :, None, None, None]
+                 - sidx[None, None, None, None, :]) < window
+    s = jnp.where(mask, s, -1e30)
+    e = jnp.exp(s - s.max(-1, keepdims=True))
+    out = jnp.einsum("btkgs,bskh->btkgh", e, v_use.astype(jnp.float32))
+    out = out / jnp.maximum(e.sum(-1), 1e-30)[..., None]
+    out = out.reshape(B, T, h_loc, v_use.shape[-1]).astype(q.dtype)
+    # table rides through unchanged so the scan-carried cache tree matches
+    return out, {"pool_k": pool_k, "pool_v": pool_v, "table": table}
 
 
 # =============================================================================

@@ -150,7 +150,8 @@ def _add_stats(a: MoEStats, b: MoEStats) -> MoEStats:
                     a.wire_faults + b.wire_faults)
 
 
-def dense_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
+def dense_block(p, x, cfg, plan, positions, cache, *, use_kernel=False,
+                token_valid=None):
     window = cfg.window if cfg.attention == "sliding" else 0
     h, cache = _attn_fwd(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg,
                          plan, positions, cache, window, use_kernel)
@@ -160,7 +161,8 @@ def dense_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
     return x, _zero_stats(), cache
 
 
-def moe_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
+def moe_block(p, x, cfg, plan, positions, cache, *, use_kernel=False,
+              token_valid=None):
     window = cfg.window if cfg.attention == "sliding" else 0
     h, cache = _attn_fwd(p["attn"], L.apply_norm(p["ln1"], x, cfg.norm), cfg,
                          plan, positions, cache, window, use_kernel)
@@ -169,8 +171,14 @@ def moe_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
     B, T, d = hn.shape
     flat = hn.reshape(B * T, d)
     loc, _ = comm.split_tokens(flat, plan.tp_axis, max(plan.tp, 1))
+    # decode-tick validity rides the same token split as the activations,
+    # so each shard masks exactly its own rows (split padding lands False)
+    valid_loc = None
+    if token_valid is not None:
+        valid_loc, _ = comm.split_tokens(token_valid.reshape(B * T),
+                                         plan.tp_axis, max(plan.tp, 1))
     y_loc, stats = moe_layer(p["moe"], loc, cfg.moe, plan, act=cfg.act,
-                             use_kernel=use_kernel)
+                             use_kernel=use_kernel, token_valid=valid_loc)
     if "shared" in p:
         # shared ("always-on") expert computed on the token-split shard with
         # REPLICATED weights: same FLOPs/device as the tensor-parallel
@@ -188,7 +196,8 @@ def moe_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
     return x, stats, cache
 
 
-def rwkv_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
+def rwkv_block(p, x, cfg, plan, positions, cache, *, use_kernel=False,
+               token_valid=None):
     c_t = None if cache is None else cache
     h, c1 = RW.rwkv_tmix_forward(p["tmix"],
                                  L.apply_norm(p["ln1"], x, "layernorm"),
@@ -202,7 +211,8 @@ def rwkv_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
     return x, _zero_stats(), cache
 
 
-def mamba_block(p, x, cfg, plan, positions, cache, *, use_kernel=False):
+def mamba_block(p, x, cfg, plan, positions, cache, *, use_kernel=False,
+                token_valid=None):
     h, cache = M2.mamba2_forward(p["mamba"],
                                  L.apply_norm(p["ln1"], x, cfg.norm),
                                  cfg, plan, cache=cache)
@@ -239,7 +249,7 @@ def init_stage(key, cfg: ModelConfig, stage: Stage, plan: MeshPlan) -> Dict:
 
 def stage_forward(params: Dict, x, cfg: ModelConfig, stage: Stage,
                   plan: MeshPlan, positions, caches, *, remat: bool,
-                  use_kernel: bool = False):
+                  use_kernel: bool = False, token_valid=None):
     """Scan the stage's blocks over the stacked leading axis."""
 
     def run(kind, p_stacked, x, caches):
@@ -249,7 +259,8 @@ def stage_forward(params: Dict, x, cfg: ModelConfig, stage: Stage,
             x, acc = carry
             p, cache = inp
             y, stats, cache = fn(p, x, cfg, plan, positions, cache,
-                                 use_kernel=use_kernel)
+                                 use_kernel=use_kernel,
+                                 token_valid=token_valid)
             return (y, _add_stats(acc, stats)), cache
 
         if remat:
@@ -378,8 +389,15 @@ def model_logits(params: Dict, x: jax.Array, cfg: ModelConfig,
 def forward(params: Dict, tokens: jax.Array, cfg0: ModelConfig,
             plan: MeshPlan, *, positions: jax.Array,
             caches: Optional[Tuple] = None, extra: Optional[Dict] = None,
-            remat: bool = False, use_kernel: bool = False):
-    """Full forward. Returns (hidden (B,T,d), logits, MoEStats, new_caches)."""
+            remat: bool = False, use_kernel: bool = False,
+            token_valid: Optional[jax.Array] = None):
+    """Full forward. Returns (hidden (B,T,d), logits, MoEStats, new_caches).
+
+    ``token_valid`` (B, T) bool, optional: live-token mask for decode-shaped
+    calls (continuous batching, bucketed prefill tails).  Only the MoE blocks
+    consume it — invalid tokens route nowhere and are excluded from the
+    router losses; attention over dead rows is masked by the caller via
+    negative ``positions`` (see ``serve/engine.py``)."""
     cfg = _model_cfg(cfg0, plan)
     stages = build_stages(cfg)
     x = embed_inputs(params, tokens, cfg, plan, extra)
@@ -389,7 +407,8 @@ def forward(params: Dict, tokens: jax.Array, cfg0: ModelConfig,
         c = None if caches is None else caches[i]
         x, stats, c = stage_forward(params["stages"][i], x, cfg, st, plan,
                                     positions, c, remat=remat,
-                                    use_kernel=use_kernel)
+                                    use_kernel=use_kernel,
+                                    token_valid=token_valid)
         acc = _add_stats(acc, stats)
         new_caches.append(c)
     logits = model_logits(params, x, cfg, plan)

@@ -1,3 +1,44 @@
+"""Serving subsystem: paged KV cache + continuous batching engine.
+
+Architecture (one box per module)::
+
+    submit() ---> waiting --admit--> prefilling --chunks--> live slots
+                     |                  |                      |
+                     |        [kvcache.PageAllocator]          |
+                     |      reservation-based admission:       |
+                     |      ceil((prompt+max_new)/page) pages  |
+                     |      up front, freed on finish          |
+                     v                  v                      v
+    [engine.Engine.step — one tick]:
+      1 prefill chunk (bucketed, compiled once per bucket length)
+      1 fused batched decode step over ALL n_slots (compiled once)
+                     |
+                     v
+    [models.layers.paged_attention per layer]:
+      scatter this tick's KV -> page pool (dead rows dropped via
+      sentinel page id); gather per-sequence views through the page
+      table; mask ``s <= q_pos`` = causality + dirty-page hygiene
+                     |
+                     v
+    [core MoE decode hop]: live-slot mask -> ``token_valid`` ->
+      ragged dispatch carries exactly the live tokens' segments;
+      MoEStats per tick -> Engine.metrics()
+
+Three layers of state:
+
+* **device, donated**: the per-stage page pools (``pool_k``/``pool_v``,
+  no batch dim) — the only large arrays, threaded through every jitted
+  step with buffer donation;
+* **host, scheduler-owned**: the page table, slot liveness, per-slot
+  positions — tiny int32/bool arrays rewritten between ticks and passed
+  into each step as fresh arguments (``kvcache.inject_tables``);
+* **host, bookkeeping**: the :class:`~repro.serve.kvcache.PageAllocator`
+  free list and request queues.
+
+``decode.py`` keeps the original fixed-batch prefill/decode pair (the
+dry-run shape path and the ring-buffer oracle the paged path is tested
+against); ``batcher.py`` is a deprecated shim over the engine.
+"""
 from repro.serve.decode import (
     build_decode_step,
     build_prefill,
@@ -5,6 +46,9 @@ from repro.serve.decode import (
     greedy_sample,
     prefill_fn,
 )
+from repro.serve.engine import Engine, Request
+from repro.serve.kvcache import PageAllocator
 
 __all__ = ["build_decode_step", "build_prefill", "decode_step_fn",
-           "greedy_sample", "prefill_fn"]
+           "greedy_sample", "prefill_fn", "Engine", "Request",
+           "PageAllocator"]

@@ -1,114 +1,46 @@
-"""Continuous batching: slot-based request scheduling over the decode step.
+"""DEPRECATED shim: :class:`Batcher` now wraps :class:`repro.serve.engine.Engine`.
 
-Production serving runs a FIXED-shape decode step (compiled once) while
-requests arrive and finish at different times. The :class:`Batcher` keeps a
-pool of ``n_slots`` sequences at independent depths:
-
-* empty slots are refilled from the waiting queue (prompt prefill into that
-  slot's cache);
-* every engine tick advances all active slots by one token;
-* finished requests free their slot immediately — a long request never
-  blocks short ones behind it (the continuous-batching win over
-  run-to-completion batching).
-
-Each slot owns a batch=1 cache and the engine reuses two jitted callables
-(prefill, decode) across all slots — one compilation each. On TPU the slots
-would additionally be fused into one batched call; the scheduling logic here
-is the substrate that decides WHAT is in that batch each tick.
+The original Batcher was a fixed-shape toy — fixed ``prompt_len`` (asserted),
+one batch-of-1 ring-buffer cache per slot, and a Python loop calling the
+jitted decode once per slot per tick.  The engine replaces all three: paged
+KV cache over a shared pool, variable-length bucketed prefill, and ONE fused
+batched decode step per tick.  This class keeps the old constructor/submit/
+run surface for existing call sites (``examples/serve_decode.py``,
+``launch/serve.py``); new code should use the Engine directly.
 """
 from __future__ import annotations
 
-import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional
+import warnings
+from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import ModelConfig
-from repro.models import transformer as T
-from repro.serve.decode import decode_step_fn, prefill_fn
+from repro.common.config import ModelConfig, ServeConfig
+from repro.serve.engine import Engine, Request  # noqa: F401  (re-export)
 from repro.sharding.plan import MeshPlan
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray                    # (S,) int32
-    max_new_tokens: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-
-
-@dataclasses.dataclass
-class _Slot:
-    req: Optional[Request] = None
-    cache: Optional[object] = None
-    pos: int = 0
-    pending: int = 0                      # next input token
 
 
 class Batcher:
     def __init__(self, params, cfg: ModelConfig, plan: MeshPlan, *,
                  n_slots: int = 4, cache_len: int = 128,
                  prompt_len: int = 16):
-        assert cfg.causal and cfg.num_codebooks == 1, \
-            "batcher supports single-stream causal LMs"
-        self.params = params
-        self.cfg = cfg
-        self.plan = plan
-        self.cache_len = cache_len
-        self.prompt_len = prompt_len
-        self.slots = [_Slot() for _ in range(n_slots)]
-        self.queue: Deque[Request] = deque()
-        self._uid = 0
-        from functools import partial
-        self._prefill = jax.jit(partial(prefill_fn, cfg=cfg, plan=plan))
-        self._decode = jax.jit(partial(decode_step_fn, cfg=cfg, plan=plan))
-        self.ticks = 0
+        warnings.warn(
+            "repro.serve.batcher.Batcher is deprecated; use "
+            "repro.serve.engine.Engine (paged KV cache + fused batched "
+            "decode). prompt_len is no longer a fixed shape — prompts of "
+            "any length up to cache_len are accepted.",
+            DeprecationWarning, stacklevel=2)
+        serve = ServeConfig(n_slots=n_slots, cache_len=cache_len,
+                            prompt_len=prompt_len,
+                            page_size=min(16, cache_len))
+        self.engine = Engine(params, cfg, plan, serve=serve)
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> int:
-        assert len(prompt) == self.prompt_len, \
-            "fixed-shape engine: pad prompts to prompt_len"
-        self._uid += 1
-        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
-        return self._uid
-
-    # ------------------------------------------------------------------ engine
-    def _fill(self):
-        for s in self.slots:
-            if s.req is None and self.queue:
-                req = self.queue.popleft()
-                cache = T.init_caches(self.cfg, 1, self.cache_len, self.plan)
-                tok, cache = self._prefill(self.params,
-                                           jnp.asarray(req.prompt)[None],
-                                           cache)
-                s.req, s.cache = req, cache
-                s.pos = len(req.prompt)
-                s.pending = int(np.asarray(tok)[0])
-                req.generated.append(s.pending)
-
-    def _tick(self, out: Dict[int, List[int]]):
-        self.ticks += 1
-        for s in self.slots:
-            if s.req is None:
-                continue
-            if len(s.req.generated) >= s.req.max_new_tokens:
-                out[s.req.uid] = s.req.generated
-                s.req, s.cache = None, None
-                continue
-            tok, s.cache = self._decode(self.params,
-                                        jnp.asarray([s.pending], jnp.int32),
-                                        s.cache, jnp.int32(s.pos))
-            s.pos += 1
-            s.pending = int(np.asarray(tok)[0])
-            s.req.generated.append(s.pending)
+        return self.engine.submit(prompt, max_new_tokens)
 
     def run(self) -> Dict[int, List[int]]:
-        """Run until every submitted request completes; return generations."""
-        out: Dict[int, List[int]] = {}
-        while self.queue or any(s.req is not None for s in self.slots):
-            self._fill()
-            self._tick(out)
-        return out
+        return self.engine.run()
+
+    @property
+    def ticks(self) -> int:
+        return self.engine.ticks

@@ -1,0 +1,127 @@
+"""Paged KV cache: fixed-size pages in a preallocated pool + page tables.
+
+The device side is a per-layer pool ``{"pool_k", "pool_v"}`` of
+``(pool_pages, page_size, KV, hd)`` (see ``models.layers.init_paged_kv_cache``
+and ``models.layers.paged_attention``); sequences own pages only through a
+``(n_slots, max_pages)`` int32 page **table**, so "evict" is a host-side list
+operation — no cache copies, no zeroing (the ``s <= q_pos`` read mask hides
+whatever a previous owner left in a reused page).
+
+The host side here is :class:`PageAllocator` — a LIFO free list (freed pages
+are reused first, which is exactly what the dirty-page equivalence test wants
+to stress) with reservation-based admission: a request is admitted only if
+``ceil((prompt + max_new) / page_size)`` pages are free, so an admitted
+sequence can never hit out-of-pages mid-flight.
+
+The page table is deliberately NOT part of the donated device cache tree:
+the scheduler rewrites rows between ticks, so the engine passes the current
+table as a small per-tick argument and ``inject_tables`` broadcasts it into
+each stage's stacked cache dict inside the jitted step (``strip_tables``
+removes the pass-through copies from the returned tree).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.sharding.plan import MeshPlan
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return max(1, math.ceil(n_tokens / page_size))
+
+
+class PageAllocator:
+    """Host-side page bookkeeping for one shared pool."""
+
+    def __init__(self, pool_pages: int, page_size: int):
+        assert pool_pages > 0 and page_size > 0
+        self.pool_pages = pool_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(pool_pages - 1, -1, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.pool_pages
+
+    def can_fit(self, n_tokens: int) -> bool:
+        return pages_needed(n_tokens, self.page_size) <= len(self._free)
+
+    def alloc(self, n_tokens: int) -> Optional[List[int]]:
+        """Reserve pages for ``n_tokens``; None if the pool can't fit them."""
+        n = pages_needed(n_tokens, self.page_size)
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[-n:], self._free[:-n]
+        return pages[::-1]          # LIFO: most recently freed page first
+
+    def free(self, pages: List[int]) -> None:
+        for pg in pages:
+            assert 0 <= pg < self.pool_pages
+        assert not set(pages) & set(self._free), "double free"
+        self._free.extend(pages)
+
+
+# =============================================================================
+# Device cache tree (per-stage stacked pools, mirrors transformer.init_caches)
+# =============================================================================
+
+def init_paged_caches(cfg0: ModelConfig, pool_pages: int, page_size: int,
+                      plan: MeshPlan) -> Tuple:
+    """Per-stage stacked page pools. Attention-backed stages only — SSM/RWKV
+    hybrids keep recurrent state per slot and are gated out by the engine."""
+    cfg = T._model_cfg(cfg0, plan)
+    stages = T.build_stages(cfg)
+
+    def stack(tree, n):
+        import jax
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    out = []
+    for st in stages:
+        assert st.kind in ("dense", "moe", "pair"), (
+            f"paged KV cache supports attention stages only, got {st.kind}")
+        pool = L.init_paged_kv_cache(cfg, pool_pages, page_size)
+        if st.kind == "pair":
+            out.append({"dense": stack(pool, st.repeats),
+                        "moe": stack(pool, st.repeats)})
+        else:
+            out.append(stack(pool, st.repeats))
+    return tuple(out)
+
+
+def _with_table(stacked: Dict, table) -> Dict:
+    R = stacked["pool_k"].shape[0]
+    return {**stacked, "table": jnp.broadcast_to(table, (R,) + table.shape)}
+
+
+def inject_tables(caches: Tuple, table) -> Tuple:
+    """Broadcast the (B, max_pages) page table into every stage cache dict
+    (trace-time; the broadcast is free inside jit)."""
+    out = []
+    for c in caches:
+        if "pool_k" in c:
+            out.append(_with_table(c, table))
+        else:
+            out.append({k: _with_table(v, table) for k, v in c.items()})
+    return tuple(out)
+
+
+def strip_tables(caches: Tuple) -> Tuple:
+    out = []
+    for c in caches:
+        if "pool_k" in c:
+            out.append({k: v for k, v in c.items() if k != "table"})
+        else:
+            out.append({kk: {k: v for k, v in vv.items() if k != "table"}
+                        for kk, vv in c.items()})
+    return tuple(out)

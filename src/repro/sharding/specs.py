@@ -233,6 +233,14 @@ def cache_specs(cache_tree, cfg: ModelConfig, plan: MeshPlan, batch: int):
             if seq_shard:
                 return P(*((None,) * (nd - 1) + (tp,)))
             return P(*((None,) * nd))
+        if name in ("pool_k", "pool_v"):
+            # paged KV pool (P_pages, page, KV, hd): NO batch dim — pages are
+            # owned via the page table, so the pool replicates over dp and
+            # shards only the KV-head dim over tp (when it divides)
+            b = (None, None, tp if kv_ok else None, None)
+            return P(*((None,) * (nd - len(b)) + b))
+        if name == "table":
+            return P(*((None,) * nd))       # page table: tiny, replicated
         if name in ("k", "v"):
             if seq_shard:
                 b = (bspec, tp, None, None)     # sequence-sharded cache

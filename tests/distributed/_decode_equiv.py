@@ -77,4 +77,47 @@ for noisy in ["zamba2-2.7b", "deepseek-v3-671b"]:
     rel = np.abs(a - b).max() / np.abs(a).max()
     print(f"{noisy:20s} logits rel err {rel:.4f}")
     assert rel < 0.05, (noisy, rel)
+
+# decode-tick MoE cell: a continuous-batching tick presents the MoE layer
+# with a live-slot mask (dead slots = invalid tokens). The distributed
+# masked RAGGED dispatch must match the single-device DENSE oracle given the
+# same mask: dead rows combine to exactly zero everywhere, live rows agree.
+from repro.core.moe import init_moe_params, moe_layer  # noqa: E402
+
+moe_cfg = get_reduced("qwen3-moe-30b-a3b").moe.with_options(
+    dispatch_backend="dropless", ragged_a2a=True)
+D, TT = 32, 16
+mp_params = init_moe_params(jax.random.PRNGKey(3), moe_cfg, D, plan)
+xx = jnp.asarray(np.random.default_rng(4).normal(size=(TT, D)), jnp.float32)
+live = jnp.asarray(np.random.default_rng(5).random(TT) < 0.6)   # dead slots
+
+dense_cfg = moe_cfg.with_options(dispatch_backend="dense", ragged_a2a=False)
+y_ref, _ = moe_layer(mp_params, xx, dense_cfg, oracle, token_valid=live)
+
+# qwen3-moe reduced: E=4 on grid (2, 4) -> experts replicate across the
+# intra axis (4 % 8 != 0), so only the inter dim is sharded
+n_g, m_g = moe_cfg.grid
+shard_intra = (moe_cfg.num_experts % (n_g * m_g) == 0
+               and (moe_cfg.num_experts // n_g) % 2 == 0)
+espec = P("data", "model" if shard_intra else None, None, None)
+mspecs = {"experts": {k: espec for k in mp_params["experts"]},
+          "router_inter": {"w": P(None, None)},
+          "router_intra": {"w": P(None, None)}}
+
+def moe_tick(p, x, valid):
+    y, _ = moe_layer(p, x, moe_cfg, plan, token_valid=valid)
+    return y
+
+tick = jax.jit(shard_map(
+    moe_tick, mesh=mesh,
+    in_specs=(mspecs, P(("data", "model"), None), P(("data", "model"))),
+    out_specs=P(("data", "model"), None)))
+y_dist = tick(mp_params, xx, live)
+a, b = np.asarray(y_ref, np.float32), np.asarray(y_dist, np.float32)
+dead = ~np.asarray(live)
+assert np.all(a[dead] == 0.0) and np.all(b[dead] == 0.0), \
+    "dead slots must combine to exactly zero"
+rel = np.abs(a - b).max() / max(np.abs(a).max(), 1e-9)
+print(f"{'moe decode tick':20s} masked ragged vs dense rel err {rel:.5f}")
+assert rel < 1e-4, rel
 print("ALL DECODE EQUIV OK")

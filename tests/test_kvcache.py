@@ -1,0 +1,161 @@
+"""Paged KV cache tests: allocator invariants, paged-vs-ring equivalence
+(page-boundary crossings, dirty-page reuse) and recompile determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models.transformer import init_caches, init_model
+from repro.serve.engine import Engine
+from repro.serve.kvcache import PageAllocator, pages_needed
+from repro.sharding.plan import single_device_plan
+
+PLAN = single_device_plan()
+
+
+# =============================================================================
+# PageAllocator
+# =============================================================================
+
+def test_allocator_reservation_and_free():
+    a = PageAllocator(pool_pages=8, page_size=4)
+    assert a.n_free == 8 and a.occupancy == 0.0
+    assert pages_needed(1, 4) == 1 and pages_needed(4, 4) == 1
+    assert pages_needed(5, 4) == 2 and pages_needed(0, 4) == 1
+
+    p1 = a.alloc(13)                      # ceil(13/4) = 4 pages
+    assert p1 is not None and len(p1) == 4 and a.n_free == 4
+    p2 = a.alloc(16)                      # exactly the remaining 4
+    assert p2 is not None and len(p2) == 4 and a.n_free == 0
+    assert a.occupancy == 1.0
+    assert a.alloc(1) is None             # pool exhausted -> refuse, not raise
+    assert not a.can_fit(1)
+
+    a.free(p1)
+    assert a.n_free == 4 and a.can_fit(16) and not a.can_fit(17)
+    a.free(p2)
+    assert a.n_free == 8
+    assert sorted(p1 + p2) == list(range(8))   # every page handed out once
+
+
+def test_allocator_lifo_reuse_and_double_free():
+    a = PageAllocator(pool_pages=4, page_size=2)
+    p1 = a.alloc(4)
+    a.free(p1)
+    p2 = a.alloc(4)
+    assert p2 == p1[::-1]                 # freed pages are reused first
+    a.free(p2)
+    with pytest.raises(AssertionError):
+        a.free(p2)                        # double free
+    with pytest.raises(AssertionError):
+        a.free([99])                      # out-of-range page id
+
+
+# =============================================================================
+# Paged cache == ring-buffer cache
+# =============================================================================
+
+def _ring_reference(cfg, params, prompt, new_tokens, cache_len):
+    """Plain fixed-batch prefill + ring-buffer decode (the oracle path)."""
+    from repro.serve.decode import build_decode_step, build_prefill
+    caches = init_caches(cfg, 1, cache_len, PLAN)
+    pf = build_prefill(cfg, PLAN, params, jnp.asarray(prompt)[None], caches)
+    tok, caches = pf(params, jnp.asarray(prompt)[None], caches)
+    dc = build_decode_step(cfg, PLAN, params, tok, caches)
+    out = [int(np.asarray(tok)[0])]
+    for i in range(new_tokens - 1):
+        tok, caches = dc(params, tok, caches, jnp.int32(len(prompt) + i))
+        out.append(int(np.asarray(tok)[0]))
+    return out
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "qwen3-moe-30b-a3b"])
+def test_paged_matches_ring_across_page_boundaries(arch):
+    """Greedy tokens through the paged engine == ring-buffer oracle.
+
+    page_size=3 with prompt_len=8 puts page boundaries at 3/6/9/12 — the
+    prefill chunk, the prefill->decode handoff and several decode steps all
+    cross a page edge, and the last page is only partially filled.
+    """
+    cfg = get_reduced(arch)
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(8, cfg.vocab_size, 8).astype(np.int32)
+    new = 6
+
+    eng = Engine(params, cfg, PLAN, cache_len=16, page_size=3, n_slots=2)
+    uid = eng.submit(prompt, max_new_tokens=new)
+    got = eng.run()[uid]
+    want = _ring_reference(cfg, params, prompt, new, cache_len=16)
+    assert got == want
+
+
+def test_dirty_page_reuse_after_evict():
+    """Freed pages are reused WITHOUT zeroing: a request admitted onto pages
+    a finished request just released must decode the same tokens as on a
+    fresh engine (the read mask, not memset, hides the stale KV rows)."""
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(3)
+    prompt_a = rng.integers(8, 500, 9).astype(np.int32)
+    prompt_b = rng.integers(8, 500, 7).astype(np.int32)
+
+    # pool sized so B can only run on pages A has dirtied and freed
+    eng = Engine(params, cfg, PLAN, cache_len=16, page_size=4, n_slots=1,
+                 pool_pages=4)
+    uid_a = eng.submit(prompt_a, max_new_tokens=5)
+    eng.run()
+    assert eng.alloc.n_free == 4           # A held the whole pool, now freed
+    uid_b = eng.submit(prompt_b, max_new_tokens=6)
+    out = eng.run()
+
+    fresh = Engine(params, cfg, PLAN, cache_len=16, page_size=4, n_slots=1,
+                   pool_pages=4)
+    uid_f = fresh.submit(prompt_b, max_new_tokens=6)
+    assert out[uid_b] == fresh.run()[uid_f]
+    assert uid_a in eng.finished
+
+
+def test_pool_exhaustion_queues_instead_of_failing():
+    """With slots free but no pages, admission waits; everything completes."""
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(4)
+    # 4 slots but pages for ~one request at a time
+    eng = Engine(params, cfg, PLAN, cache_len=16, page_size=4, n_slots=4,
+                 pool_pages=5)
+    uids = [eng.submit(rng.integers(8, 500, 8).astype(np.int32), 4)
+            for _ in range(3)]
+    out = eng.run()
+    assert sorted(out) == sorted(uids)
+    assert eng.alloc.n_free == 5
+
+
+def test_oversized_request_rejected():
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    eng = Engine(params, cfg, PLAN, cache_len=16, page_size=4, n_slots=2,
+                 pool_pages=2)
+    with pytest.raises(ValueError):
+        eng.submit(np.arange(12, dtype=np.int32), max_new_tokens=8)  # > cache
+    with pytest.raises(ValueError):                  # fits cache, never pool
+        eng.submit(np.arange(8, dtype=np.int32), max_new_tokens=4)
+
+
+def test_recompile_determinism():
+    """The fused decode step compiles exactly once, and each prefill bucket
+    exactly once, across ragged prompt lengths and many admit/evict cycles."""
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(5)
+    eng = Engine(params, cfg, PLAN, cache_len=64, page_size=8, n_slots=2,
+                 prefill_buckets="8,16,32")
+    for plen in [3, 8, 11, 16, 20, 5]:    # hits buckets 8, 16 and 32
+        eng.submit(rng.integers(8, 500, plen).astype(np.int32),
+                   max_new_tokens=3)
+    eng.run()
+    n = eng.compile_counts()
+    assert n["decode"] == 1, n
+    assert set(n["prefill"]) <= {8, 16, 32}
+    assert all(v == 1 for v in n["prefill"].values()), n

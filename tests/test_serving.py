@@ -56,6 +56,81 @@ def test_batcher_matches_plain_decode():
     assert got == want
 
 
+def test_engine_no_starvation_and_pages_freed():
+    """Many more requests than slots: every request completes (FCFS head-of-
+    line admission cannot starve), and every page returns to the pool."""
+    from repro.serve.engine import Engine
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(6)
+    eng = Engine(params, cfg, PLAN, cache_len=32, page_size=4, n_slots=2)
+    uids = [eng.submit(rng.integers(8, 500, int(rng.integers(2, 10)))
+                       .astype(np.int32), int(rng.integers(1, 5)))
+            for _ in range(9)]
+    out = eng.run()
+    assert sorted(out) == sorted(uids)
+    assert eng.alloc.n_free == eng.alloc.pool_pages
+    assert not eng.busy and all(r is None for r in eng.slot_req)
+    m = eng.metrics()
+    assert m["completed"] == 9 and 0.0 < m["page_occupancy_max"] <= 1.0
+
+
+def test_engine_deterministic_seeded_trace():
+    """Two engines fed the identical request trace produce identical tokens
+    in the identical number of ticks (the scheduler has no hidden state)."""
+    from repro.serve.engine import Engine
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+
+    def trace(eng):
+        rng = np.random.default_rng(7)
+        for _ in range(5):
+            eng.submit(rng.integers(8, 500, int(rng.integers(3, 9)))
+                       .astype(np.int32), int(rng.integers(2, 6)))
+        return eng.run(), eng.ticks
+
+    a = Engine(params, cfg, PLAN, cache_len=32, page_size=4, n_slots=2)
+    b = Engine(params, cfg, PLAN, cache_len=32, page_size=4, n_slots=2)
+    out_a, ticks_a = trace(a)
+    out_b, ticks_b = trace(b)
+    assert out_a == out_b and ticks_a == ticks_b
+
+
+def test_engine_sjf_admits_shortest_first():
+    from repro.serve.engine import Engine
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    rng = np.random.default_rng(8)
+    eng = Engine(params, cfg, PLAN, cache_len=32, page_size=4, n_slots=1,
+                 admit_policy="sjf")
+    long = eng.submit(rng.integers(8, 500, 12).astype(np.int32), 2)
+    short = eng.submit(rng.integers(8, 500, 3).astype(np.int32), 2)
+    first_done = None
+    while eng.busy:
+        eng.step()
+        if eng.finished and first_done is None:
+            first_done = next(iter(eng.finished))
+    assert first_done == short and long in eng.finished
+
+
+def test_engine_rejects_recurrent_state_archs():
+    from repro.serve.engine import Engine
+    cfg = get_reduced("rwkv6-1.6b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    with pytest.raises(ValueError, match="ROADMAP"):
+        Engine(params, cfg, PLAN)
+
+
+def test_batcher_shim_deprecation():
+    import warnings
+    cfg = get_reduced("qwen1.5-0.5b")
+    params = init_model(jax.random.PRNGKey(0), cfg, PLAN)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        Batcher(params, cfg, PLAN, n_slots=2, cache_len=64, prompt_len=8)
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
 def test_evaluate_harness():
     from repro.train.evaluate import evaluate
     cfg = get_reduced("qwen1.5-0.5b")
